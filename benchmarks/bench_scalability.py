@@ -1,0 +1,105 @@
+"""Scalability ablations for the paper's closing claim ("flexible and
+scalable in terms of network size"):
+
+  * time-to-target vs number of walks M (parallelism scaling),
+  * time-to-target vs network size N (at fixed total data),
+  * stale-fixed-point bias vs tau (the Remark-2 effect, closed form).
+
+Run directly (`python -m benchmarks.bench_scalability`) or via
+benchmarks.run (bench_scalability entry). CSV: name,us_per_call,derived.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import (  # noqa: E402
+    APIBCD, CyclicWalk, hamiltonian_cycle, random_graph,
+    simulate_incremental,
+)
+from repro.core import losses as L  # noqa: E402
+from repro.core.baselines import (  # noqa: E402
+    apibcd_stale_fixed_point, centralized_solution, penalized_solution,
+)
+from repro.data import make_problem  # noqa: E402
+
+
+def bench_walk_scaling(target=0.1, iters=800):
+    """API-BCD time-to-target vs M on cpusmall (N=20)."""
+    problem = make_problem("cpusmall", num_agents=20, subsample=None, seed=0)
+    net = random_graph(20, zeta=0.7, seed=0)
+    order = hamiltonian_cycle(net)
+    rows = []
+    for m in (1, 2, 5, 10):
+        method = APIBCD(problem, tau=0.5 / m, num_walks=m)
+        walks = [CyclicWalk(order) for _ in range(m)]
+        t0 = time.time()
+        res = simulate_incremental(method, net, walks,
+                                   max_iterations=iters, eval_every=10)
+        wall = time.time() - t0
+        tt, ct = res.time_to_metric(target)
+        derived = (f"M={m};final={res.trace[-1].metric:.4f}")
+        if tt is not None:
+            derived += f";t_to_{target}={tt * 1e3:.3f}ms;c_to={ct}"
+        rows.append((f"scal_walks_M{m}", wall / iters * 1e6, derived))
+    return rows
+
+
+def bench_network_scaling(target=0.1, iters_per_agent=30):
+    """API-BCD (M=5) time-to-target vs N at fixed total data."""
+    rows = []
+    for n in (10, 20, 50):
+        problem = make_problem("cadata", num_agents=n, subsample=None,
+                               seed=0)
+        net = random_graph(n, zeta=0.7, seed=0)
+        order = hamiltonian_cycle(net)
+        method = APIBCD(problem, tau=0.1, num_walks=5)
+        walks = [CyclicWalk(order) for _ in range(5)]
+        iters = iters_per_agent * n
+        t0 = time.time()
+        res = simulate_incremental(method, net, walks,
+                                   max_iterations=iters, eval_every=10)
+        wall = time.time() - t0
+        tt, ct = res.time_to_metric(target)
+        derived = f"N={n};final={res.trace[-1].metric:.4f}"
+        if tt is not None:
+            derived += f";t_to_{target}={tt * 1e3:.3f}ms;c_to={ct}"
+        rows.append((f"scal_agents_N{n}", wall / iters * 1e6, derived))
+    return rows
+
+
+def bench_stale_bias_vs_tau():
+    """Closed-form: NMSE of the physical API-BCD fixed point vs the
+    fresh-token penalized optimum, sweeping tau (Remark 2, quantified)."""
+    problem = make_problem("cpusmall", num_agents=20, subsample=None, seed=0)
+    x_star = centralized_solution(problem)
+    nmse_star = L.evaluate(problem, x_star)
+    rows = []
+    for tau in (0.02, 0.1, 0.5, 2.0):
+        xs_stale, _ = apibcd_stale_fixed_point(problem, tau, 5)
+        _, z_fresh = penalized_solution(problem, tau, 5)
+        rows.append((
+            f"stale_bias_tau{tau}", 0.0,
+            f"stale_nmse={L.evaluate(problem, xs_stale.mean(0)):.4f};"
+            f"fresh_nmse={L.evaluate(problem, z_fresh):.4f};"
+            f"centralized={nmse_star:.4f}"))
+    return rows
+
+
+def all_benches():
+    return (bench_walk_scaling() + bench_network_scaling()
+            + bench_stale_bias_vs_tau())
+
+
+def main():
+    print("name,us_per_call,derived")
+    for name, us, derived in all_benches():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

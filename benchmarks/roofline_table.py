@@ -1,0 +1,99 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline tables."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ARCHS = ["whisper-small", "rwkv6-1.6b", "qwen3-8b", "deepseek-v2-236b",
+         "recurrentgemma-2b", "qwen2-0.5b", "internlm2-1.8b",
+         "phi-3-vision-4.2b", "nemotron-4-15b", "dbrx-132b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(results_dir="results/dryrun"):
+    out = {}
+    for f in glob.glob(os.path.join(results_dir, "*.json")):
+        r = json.load(open(f))
+        pod = "2pod" if r.get("multi_pod") else "1pod"
+        out[(r["arch"], r["shape"], pod)] = r
+    return out
+
+
+def _fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def roofline_table(results, pod="1pod"):
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "MODEL/HLO flops | HLO flops | coll bytes |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCHS:
+        for s in SHAPES:
+            r = results.get((a, s, pod))
+            if r is None:
+                lines.append(f"| {a} | {s} | - | - | - | MISSING | | | |")
+                continue
+            if "skipped" in r:
+                lines.append(f"| {a} | {s} | — | — | — | *skipped* "
+                             f"({r['skipped'][:40]}…) | | | |")
+                continue
+            rl = r["roofline"]
+            ratio = r.get("useful_flop_ratio")
+            lines.append(
+                f"| {a} | {s} | {_fmt_s(rl['compute_s'])} | "
+                f"{_fmt_s(rl['memory_s'])} | {_fmt_s(rl['collective_s'])} | "
+                f"**{rl['dominant']}** | "
+                f"{ratio:.2f} | {rl['flops']:.2e} | "
+                f"{rl['collective_bytes']:.2e} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(results, pod="1pod"):
+    lines = [
+        "| arch | shape | compile s | params | args GB/dev | temp GB/dev | "
+        "collective mix |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCHS:
+        for s in SHAPES:
+            r = results.get((a, s, pod))
+            if r is None or "skipped" in r:
+                status = "skipped" if (r and "skipped" in r) else "missing"
+                lines.append(f"| {a} | {s} | — | — | — | — | *{status}* |")
+                continue
+            mem = r.get("memory_analysis", {})
+            arg = mem.get("argument_size_in_bytes", 0) / 1e9
+            tmp = mem.get("temp_size_in_bytes", 0) / 1e9
+            mix = ", ".join(
+                f"{k.replace('collective-', 'c-')}:{v / 1e9:.1f}GB"
+                for k, v in sorted(r.get("collectives", {}).items(),
+                                   key=lambda kv: -kv[1])[:3])
+            lines.append(
+                f"| {a} | {s} | {r['compile_s']:.0f} | "
+                f"{r['params'] / 1e9:.2f}B | {arg:.2f} | {tmp:.2f} | "
+                f"{mix} |")
+    return "\n".join(lines)
+
+
+def main():
+    results = load()
+    n_ok = sum(1 for r in results.values() if "skipped" not in r)
+    n_skip = sum(1 for r in results.values() if "skipped" in r)
+    print(f"# Dry-run aggregate: {n_ok} compiled, {n_skip} skipped, "
+          f"{len(results)} total\n")
+    for pod in ("1pod", "2pod"):
+        print(f"\n## Roofline — {pod}\n")
+        print(roofline_table(results, pod))
+        print(f"\n## Dry-run details — {pod}\n")
+        print(dryrun_table(results, pod))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,210 @@
+"""Benchmark harness — one entry per paper figure plus kernel microbenches.
+
+Prints ``name,us_per_call,derived`` CSV:
+  * fig3/4 (regression): derived = "final=..;t_to_target=..;c_to_target=.."
+  * fig5/6 (classification): derived = accuracy/time/comm-to-target
+  * kernel microbenches: us_per_call of the interpret-mode kernel call
+    (CPU emulation — structural check, not TPU timing)
+  * roofline: aggregate of the dry-run sweep (if results/dryrun exists)
+
+The paper's own hyper-parameters are used (figure captions): N, zeta, K=5
+walks, alpha, tau_IS, tau_API-BCD; datasets are the seeded surrogates
+(offline container) subsampled for the 1-core CPU budget.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import (  # noqa: E402
+    APIBCD, DGD, GAPIBCD, IBCD, WPG, CyclicWalk, DelayModel,
+    hamiltonian_cycle, metropolis_hastings_matrix, random_graph,
+    simulate_gossip, simulate_incremental,
+)
+from repro.data import make_problem  # noqa: E402
+
+
+def _run_sim(method, net, order, iters, seed=0):
+    walks = [CyclicWalk(order) for _ in range(method.num_walks)]
+    t0 = time.time()
+    res = simulate_incremental(method, net, walks, max_iterations=iters,
+                               eval_every=10, seed=seed)
+    wall = time.time() - t0
+    return res, wall
+
+
+def _figure(name, dataset, n_agents, zeta, m_walks, alpha, tau_is, tau_api,
+            target, lower_better, iters, subsample):
+    problem = make_problem(dataset, num_agents=n_agents,
+                           subsample=subsample, seed=0)
+    net = random_graph(n_agents, zeta=zeta, seed=0)
+    order = hamiltonian_cycle(net)
+
+    rows = []
+    methods = [
+        ("WPG", WPG(problem, alpha=alpha)),
+        ("I-BCD", IBCD(problem, tau=tau_is)),
+        ("API-BCD", APIBCD(problem, tau=tau_api, num_walks=m_walks)),
+        # the paper's Remark-1 variant: first-order update, no inner solve
+        ("gAPI-BCD", GAPIBCD(problem, tau=tau_api, num_walks=m_walks,
+                             rho=2.0)),
+    ]
+    for mname, method in methods:
+        res, wall = _run_sim(method, net, order, iters)
+        t, c, k, metric = res.as_arrays()
+        tt, ct = res.time_to_metric(target, lower_is_better=lower_better)
+        us = wall / max(len(k), 1) * 1e6
+        derived = (f"final={metric[-1]:.4f};sim_time={t[-1] * 1e3:.2f}ms;"
+                   f"comm={int(c[-1])}")
+        if tt is not None:
+            derived += f";t_to_target={tt * 1e3:.3f}ms;c_to_target={ct}"
+        rows.append((f"{name}_{mname}", us, derived))
+
+    # gossip reference (the communication blow-up the paper motivates
+    # incremental methods against)
+    dgd = DGD(problem, alpha=min(alpha, 0.05),
+              mixing=metropolis_hastings_matrix(net))
+    t0 = time.time()
+    res = simulate_gossip(dgd, net, max_rounds=max(iters // n_agents, 50),
+                          eval_every=5)
+    wall = time.time() - t0
+    t, c, k, metric = res.as_arrays()
+    tt, ct = res.time_to_metric(target, lower_is_better=lower_better)
+    derived = (f"final={metric[-1]:.4f};sim_time={t[-1] * 1e3:.2f}ms;"
+               f"comm={int(c[-1])}")
+    if tt is not None:
+        derived += f";t_to_target={tt * 1e3:.3f}ms;c_to_target={ct}"
+    rows.append((f"{name}_DGD", wall / max(len(k), 1) * 1e6, derived))
+    return rows
+
+
+def bench_fig3_cpusmall():
+    """Fig. 3: cpusmall, N=20, zeta=0.7, K=5, alpha=0.5, tau_IS=1,
+    tau_API=0.1; NMSE vs running time and communication."""
+    return _figure("fig3_cpusmall", "cpusmall", 20, 0.7, 5, 0.5, 1.0, 0.1,
+                   target=0.1, lower_better=True, iters=600,
+                   subsample=None)   # full 8192 samples, as in the paper
+
+
+def bench_fig4_cadata():
+    """Fig. 4: cadata, N=50, zeta=0.7, K=5, alpha=0.2, tau_IS=2.8,
+    tau_API=0.1."""
+    return _figure("fig4_cadata", "cadata", 50, 0.7, 5, 0.2, 2.8, 0.1,
+                   target=0.1, lower_better=True, iters=1000,
+                   subsample=None)   # full 20640 samples
+
+
+def bench_fig5_ijcnn1():
+    """Fig. 5: ijcnn1, N=50, zeta=0.7, K=5, alpha=0.5, tau_IS=2.8,
+    tau_API=0.1; accuracy."""
+    return _figure("fig5_ijcnn1", "ijcnn1", 50, 0.7, 5, 0.5, 2.8, 0.1,
+                   target=0.76, lower_better=False, iters=800,
+                   subsample=10000)
+
+
+def bench_fig6_usps():
+    """Fig. 6: USPS, N=10, zeta=0.7, K=5, alpha=0.1, tau_IS=5, tau_API=1."""
+    return _figure("fig6_usps", "usps", 10, 0.7, 5, 0.1, 5.0, 1.0,
+                   target=0.9, lower_better=False, iters=300,
+                   subsample=2000)
+
+
+def bench_kernels():
+    """Interpret-mode kernel microbenches (structural CPU timing)."""
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    rows = []
+
+    def timeit(name, fn, *args, reps=3, **kw):
+        fn(*args, **kw)     # warmup/trace
+        t0 = time.time()
+        out = None
+        for _ in range(reps):
+            out = fn(*args, **kw)
+        jax.tree.map(lambda x: x.block_until_ready(), out)
+        rows.append((name, (time.time() - t0) / reps * 1e6, "interpret"))
+
+    x = jnp.asarray(rng.standard_normal((4096, 1024)), jnp.float32)
+    g = jnp.asarray(rng.standard_normal((4096, 1024)), jnp.float32)
+    z = jnp.asarray(rng.standard_normal((4096, 1024)), jnp.float32)
+    timeit("kernel_prox_update_4M", ops.prox_update, x, g, z,
+           tau=0.1, rho=1.0, num_walks=4, num_agents=16, interpret=True)
+
+    q = jnp.asarray(rng.standard_normal((1, 256, 4, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 256, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 256, 2, 64)), jnp.float32)
+    timeit("kernel_flash_attention_256", ops.flash_attention, q, k, v,
+           causal=True, block_q=128, block_k=128, interpret=True)
+
+    qd = jnp.asarray(rng.standard_normal((2, 8, 64)), jnp.float32)
+    kd = jnp.asarray(rng.standard_normal((2, 1024, 2, 64)), jnp.float32)
+    vd = jnp.asarray(rng.standard_normal((2, 1024, 2, 64)), jnp.float32)
+    timeit("kernel_decode_attention_1k", ops.decode_attention, qd, kd, vd,
+           block_k=256, interpret=True)
+
+    r = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.5, 0.99, (1, 2, 128, 64)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((2, 64)), jnp.float32)
+    timeit("kernel_rwkv6_scan_128", ops.rwkv6_scan, r, r, r, w, u,
+           chunk=64, interpret=True)
+
+    a = jnp.asarray(rng.uniform(0.5, 0.999, (2, 128, 256)), jnp.float32)
+    uu = jnp.asarray(rng.standard_normal((2, 128, 256)), jnp.float32)
+    timeit("kernel_rglru_scan_128", ops.rglru_scan, a, uu, chunk=64,
+           block_w=256, interpret=True)
+    return rows
+
+
+def bench_roofline_summary():
+    """Aggregate the dry-run sweep (if present)."""
+    import glob
+    import json
+    rows = []
+    for pod in ("1pod", "2pod"):
+        files = glob.glob(f"results/dryrun/*_{pod}.json")
+        if not files:
+            rows.append((f"roofline_sweep_{pod}", 0.0,
+                         "results/dryrun missing — run "
+                         "src/repro/launch/dryrun_all.sh"))
+            continue
+        doms = {}
+        for f in files:
+            r = json.load(open(f))
+            if "skipped" in r:
+                doms["skipped"] = doms.get("skipped", 0) + 1
+                continue
+            d = r["roofline"]["dominant"]
+            doms[d] = doms.get(d, 0) + 1
+        mix = ";".join(f"{k}={v}" for k, v in sorted(doms.items()))
+        rows.append((f"roofline_sweep_{pod}", 0.0,
+                     f"combos={len(files)};{mix}"))
+    return rows
+
+
+def bench_scalability():
+    """Paper's closing claim: scalability in M (walks) and N (agents),
+    plus the closed-form stale-bias-vs-tau sweep (Remark 2)."""
+    from benchmarks.bench_scalability import all_benches
+    return all_benches()
+
+
+BENCHES = [bench_fig3_cpusmall, bench_fig4_cadata, bench_fig5_ijcnn1,
+           bench_fig6_usps, bench_scalability, bench_kernels,
+           bench_roofline_summary]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for bench in BENCHES:
+        for name, us, derived in bench():
+            print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

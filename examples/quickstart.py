@@ -1,0 +1,45 @@
+"""Quickstart: decentralized least squares with API-BCD in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a 20-agent network, trains a linear model with 5 parallel token
+walks (the paper's Algorithm 2), and compares against the centralized
+solution and the single-token I-BCD (Algorithm 1).
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    APIBCD, IBCD, CyclicWalk, centralized_solution, hamiltonian_cycle,
+    random_graph, simulate_incremental,
+)
+from repro.data import make_problem  # noqa: E402
+
+
+def main():
+    # 20 agents, random connected graph with 70% edge density (paper Fig. 3)
+    problem = make_problem("cpusmall", num_agents=20, subsample=2048)
+    net = random_graph(20, zeta=0.7, seed=0)
+    order = hamiltonian_cycle(net)
+
+    x_star = centralized_solution(problem)
+    print(f"centralized NMSE: "
+          f"{np.square(problem.test_features @ x_star - problem.test_targets).sum() / np.square(problem.test_targets).sum():.4f}")
+
+    for method in (IBCD(problem, tau=1.0),
+                   APIBCD(problem, tau=0.1, num_walks=5)):
+        walks = [CyclicWalk(order) for _ in range(method.num_walks)]
+        res = simulate_incremental(method, net, walks, max_iterations=400,
+                                   eval_every=40)
+        t, c, k, nmse = res.as_arrays()
+        print(f"\n{method.name} (M={method.num_walks} walks)")
+        print(f"  NMSE trace: {np.round(nmse, 4).tolist()}")
+        print(f"  simulated time {t[-1] * 1e3:.2f} ms, "
+              f"communication {int(c[-1])} link-uses")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro: API-BCD decentralized learning framework in JAX.
+
+Implements Chen, Ye, Xiao, Skoglund, "Asynchronous Parallel Incremental
+Block-Coordinate Descent for Decentralized Machine Learning" (2022),
+as a production-grade multi-pod JAX training/inference framework.
+"""
+
+__version__ = "0.1.0"

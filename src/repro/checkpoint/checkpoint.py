@@ -1,0 +1,57 @@
+"""Pytree checkpointing: npz tensors + msgpack-encoded tree structure.
+
+Works for any state pytree (params, tokens, zhat, optimizer moments).
+Arrays are gathered to host (fine for the CPU/demo path; a production
+deployment would swap in distributed array serialization — the interface
+is the same).
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(path: str, state, step: int = 0, metadata=None):
+    """Write state to `<path>` (a directory)."""
+    os.makedirs(path, exist_ok=True)
+    arrays = _flatten_with_paths(state)
+    np.savez(os.path.join(path, "arrays.npz"),
+             **{k: v for k, v in arrays.items()})
+    treedef = jax.tree_util.tree_structure(state)
+    meta = {"step": int(step), "treedef": str(treedef),
+            "keys": list(arrays.keys()), "metadata": metadata or {}}
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump(meta, f)
+
+
+def load_checkpoint(path: str, like):
+    """Restore into the structure of `like` (a template pytree).
+
+    Returns (state, step)."""
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat_like = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_k, leaf in flat_like[0]:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path_k)
+        arr = data[key]
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    state = jax.tree_util.tree_unflatten(flat_like[1], leaves)
+    return state, meta["step"]

@@ -1,0 +1,40 @@
+"""Core: the paper's contribution — incremental BCD decentralized learning.
+
+Exports the convex reference implementations (Algorithms 1-2, gAPI-BCD,
+baselines, async simulator) and the sharded mesh trainer.
+"""
+from repro.core.graph import (  # noqa: F401
+    CyclicWalk,
+    MarkovWalk,
+    Network,
+    complete_graph,
+    hamiltonian_cycle,
+    metropolis_hastings_matrix,
+    random_graph,
+    ring_graph,
+    spread_token_starts,
+    uniform_neighbor_matrix,
+)
+from repro.core.losses import (  # noqa: F401
+    Problem,
+    evaluate,
+    global_objective,
+    make_local_loss,
+    make_prox_solver,
+    penalty_objective,
+)
+from repro.core.methods import (  # noqa: F401
+    APIBCD,
+    GAPIBCD,
+    IBCD,
+    IncrementalMethod,
+    MethodState,
+)
+from repro.core.baselines import DGD, WPG, centralized_solution  # noqa: F401
+from repro.core.driver import run_serial  # noqa: F401
+from repro.core.simulator import (  # noqa: F401
+    DelayModel,
+    SimResult,
+    simulate_gossip,
+    simulate_incremental,
+)

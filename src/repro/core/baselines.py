@@ -1,0 +1,183 @@
+"""Baselines the paper compares against (and the centralized reference).
+
+* WPG (Mao, Gu, Yin [17]) — walk proximal gradient, the paper's main
+  comparison (eq. 19): the token z walks a Hamiltonian cycle; the active
+  agent takes a gradient step from z and updates z incrementally.
+* DGD (Yuan, Ling, Yin [12]) — synchronous gossip: every agent exchanges
+  with every neighbour each round (high communication — the regime the
+  incremental methods are designed to beat).
+* Centralized prox (eqs. 4-5) — the parameter-server reference solution
+  used as ground truth in tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import losses as L
+from repro.core.methods import IncrementalMethod, MethodState
+
+
+class WPG(IncrementalMethod):
+    """Walk Proximal Gradient (eq. 19) — single token, gradient update."""
+
+    name = "WPG"
+
+    def __init__(self, problem: L.Problem, alpha: float):
+        super().__init__(problem, num_walks=1)
+        self.alpha = alpha
+        self._grad = [
+            jax.jit(jax.grad(L.make_local_loss(problem, i)))
+            for i in range(problem.num_agents)
+        ]
+
+    def update(self, state: MethodState, agent: int, walk: int = 0) -> MethodState:
+        n = self.problem.num_agents
+        s = state.copy()
+        z = s.tokens[0]
+        x_old = s.xs[agent].copy()
+        g = np.asarray(self._grad[agent](jnp.asarray(z)))
+        x_new = z - self.alpha * g                       # eq. (19) top
+        s.xs[agent] = x_new
+        s.tokens[0] = z + (x_new - x_old) / n            # eq. (19) bottom
+        s.iteration += 1
+        return s
+
+
+class DGD:
+    """Decentralized gradient descent (gossip): x <- W x - alpha * grad.
+
+    Synchronous: all agents and all links are active every round. Uses the
+    Metropolis-Hastings mixing matrix. Not an IncrementalMethod — the
+    simulator treats it as a synchronous round-based method where each round
+    costs 2|E| communication units (unicast per directed link, as in the
+    paper's cost model).
+    """
+
+    name = "DGD"
+
+    def __init__(self, problem: L.Problem, alpha: float, mixing: np.ndarray):
+        self.problem = problem
+        self.alpha = alpha
+        self.mixing = mixing
+        self._grad = [
+            jax.jit(jax.grad(L.make_local_loss(problem, i)))
+            for i in range(problem.num_agents)
+        ]
+
+    def init(self) -> np.ndarray:
+        return np.zeros((self.problem.num_agents, self.problem.dim))
+
+    def round(self, xs: np.ndarray) -> np.ndarray:
+        mixed = self.mixing @ xs
+        grads = np.stack(
+            [np.asarray(self._grad[i](jnp.asarray(xs[i])))
+             for i in range(self.problem.num_agents)])
+        return mixed - self.alpha * grads
+
+    def model_estimate(self, xs: np.ndarray) -> np.ndarray:
+        return xs.mean(axis=0)
+
+    def flops_per_update(self) -> float:
+        d = int(np.mean([f.shape[0] for f in self.problem.features]))
+        return 4.0 * d * self.problem.dim
+
+
+def penalized_solution(problem: L.Problem, tau: float,
+                       num_tokens: int = 1):
+    """Exact minimizer (x*, z*) of the penalty objective F (eq. 3 / eq. 10).
+
+    Least-squares only. Stationarity (all tokens equal at the optimum):
+        (H_i + tau*M I) x_i = c_i + tau*M z,   z = mean_i x_i,
+    with H_i = A_i^T A_i / d_i, c_i = A_i^T b_i / d_i. Eliminating x_i:
+        z = [I - tau*M * mean_i (H_i+tau*M I)^{-1}]^{-1}
+              mean_i (H_i+tau*M I)^{-1} c_i.
+    Returns (xs [N,p], z [p]).
+    """
+    assert problem.kind == "lsq"
+    tm = tau * num_tokens
+    p = problem.dim
+    n = problem.num_agents
+    invs, ics = [], []
+    for i in range(n):
+        a = np.asarray(problem.features[i])
+        b = np.asarray(problem.targets[i])
+        d = a.shape[0]
+        h = a.T @ a / d + tm * np.eye(p)
+        hinv = np.linalg.inv(h)
+        invs.append(hinv)
+        ics.append(hinv @ (a.T @ b / d))
+    mean_inv = np.mean(invs, axis=0)
+    mean_ic = np.mean(ics, axis=0)
+    z = np.linalg.solve(np.eye(p) - tm * mean_inv, mean_ic)
+    # x_i = (H_i + tau*M I)^{-1} (c_i + tau*M z) = ics_i + tau*M * hinv_i z
+    xs = np.stack([ics[i] + tm * (invs[i] @ z) for i in range(n)])
+    return xs, z
+
+
+def apibcd_stale_fixed_point(problem: L.Problem, tau: float,
+                             num_tokens: int):
+    """Exact fixed point of *physical* API-BCD (stale local copies).
+
+    With zero initialization, every x-delta is credited to exactly one
+    token, so sum_m z_m tracks mean_i x_i exactly (telescoping eq. 12b).
+    At the fixed point therefore
+        x_i = (H_i + tau*M I)^{-1} (c_i + tau * zbar),  zbar = mean_i x_i,
+    i.e. the consensus pull is tau (not tau*M) while the ridge is tau*M.
+    This differs from the minimizer of F (eq. 10) — the gap the paper's
+    Remark 2 alludes to, and the reason the paper tunes tau_API << tau_IS
+    (their experiments use tau_API-BCD = 0.1 with K = 5 walks).
+    Least-squares only. Returns (xs [N,p], zbar [p]).
+    """
+    assert problem.kind == "lsq"
+    tm = tau * num_tokens
+    p = problem.dim
+    n = problem.num_agents
+    invs, ics = [], []
+    for i in range(n):
+        a = np.asarray(problem.features[i])
+        b = np.asarray(problem.targets[i])
+        d = a.shape[0]
+        hinv = np.linalg.inv(a.T @ a / d + tm * np.eye(p))
+        invs.append(hinv)
+        ics.append(hinv @ (a.T @ b / d))
+    mean_inv = np.mean(invs, axis=0)
+    mean_ic = np.mean(ics, axis=0)
+    zbar = np.linalg.solve(np.eye(p) - tau * mean_inv, mean_ic)
+    xs = np.stack([ics[i] + tau * (invs[i] @ zbar) for i in range(n)])
+    return xs, zbar
+
+
+def centralized_solution(problem: L.Problem, tau: float = None,
+                         iters: int = 2000, lr: float = None) -> np.ndarray:
+    """Reference minimizer of problem (1): min_x sum_i f_i(x).
+
+    Closed form for least squares; full-batch Newton for logistic/softmax.
+    """
+    if problem.kind == "lsq":
+        gram = 0.0
+        atb = 0.0
+        for i in range(problem.num_agents):
+            a = np.asarray(problem.features[i])
+            b = np.asarray(problem.targets[i])
+            d = a.shape[0]
+            gram = gram + a.T @ a / d
+            atb = atb + a.T @ b / d
+        # tiny ridge for numerical safety (rank-deficient synthetic data)
+        gram = gram + 1e-9 * np.eye(gram.shape[0])
+        return np.linalg.solve(gram, atb)
+
+    obj = lambda x: L.global_objective(problem, x)
+    grad_fn = jax.jit(jax.grad(obj))
+
+    x = jnp.zeros(problem.dim)
+    for _ in range(60):  # damped Newton via CG on the true Hessian
+        g = grad_fn(x)
+        hvp = lambda v: jax.jvp(grad_fn, (x,), (v,))[1]
+        step, _ = jax.scipy.sparse.linalg.cg(
+            lambda v: hvp(v) + 1e-8 * v, g, maxiter=50)
+        x = x - step
+        if float(jnp.linalg.norm(g)) < 1e-9:
+            break
+    return np.asarray(x)

@@ -1,0 +1,194 @@
+"""Local losses f_i, exact proximal solvers, and evaluation metrics.
+
+The paper's experiments cover two convex task families:
+  * least squares (linear regression; cpusmall, cadata) — NMSE metric,
+  * (multinomial) logistic regression (ijcnn1, USPS) — accuracy metric.
+
+f_i(x) = (1/d_i) sum_l loss(x; xi_{i,l})  over the agent's local shard.
+
+For I-BCD / API-BCD the x-update is the proximal subproblem
+    argmin_x f_i(x) + (tau/2) sum_m ||x - z_m||^2           (eqs. 7, 12a)
+which for least squares has the closed form
+    (A^T A / d + tau*M I) x = A^T b / d + tau * sum_m z_m
+and for logistic losses is solved by a few damped-Newton iterations
+(the paper does not pin a sub-solver; Newton converges in <10 steps at
+these dimensions). gAPI-BCD (eq. 15) avoids the sub-solve entirely.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    """A decentralized convex learning problem.
+
+    Attributes:
+      kind: 'lsq' | 'logistic' | 'softmax'.
+      features: list/array of per-agent design matrices A_i [d_i, p_in].
+      targets:  per-agent targets b_i ([d_i] reals or int labels).
+      dim: model dimension p (p_in for lsq/logistic, p_in*classes for softmax).
+      num_classes: for 'softmax'.
+      test_features / test_targets: held-out global test set.
+    """
+
+    kind: str
+    features: tuple
+    targets: tuple
+    dim: int
+    num_classes: int = 2
+    test_features: Optional[np.ndarray] = None
+    test_targets: Optional[np.ndarray] = None
+
+    @property
+    def num_agents(self) -> int:
+        return len(self.features)
+
+
+# ---------------------------------------------------------------------------
+# per-sample losses
+# ---------------------------------------------------------------------------
+
+
+def _lsq_loss(x, a, b):
+    r = a @ x - b
+    return 0.5 * jnp.mean(r * r)
+
+
+def _logistic_loss(x, a, y):
+    """y in {-1, +1}; mean logistic loss."""
+    margins = y * (a @ x)
+    return jnp.mean(jnp.logaddexp(0.0, -margins))
+
+
+def _softmax_loss(x, a, y, num_classes):
+    w = x.reshape(a.shape[1], num_classes)
+    logits = a @ w
+    logz = jax.nn.logsumexp(logits, axis=1)
+    ll = logits[jnp.arange(a.shape[0]), y] - logz
+    return -jnp.mean(ll)
+
+
+def make_local_loss(problem: Problem, agent: int) -> Callable:
+    """Returns f_i: R^p -> R for agent i (jit-able, closed over data)."""
+    a = jnp.asarray(problem.features[agent])
+    b = jnp.asarray(problem.targets[agent])
+    if problem.kind == "lsq":
+        return partial(_lsq_loss, a=a, b=b)
+    if problem.kind == "logistic":
+        return partial(_logistic_loss, a=a, y=b)
+    if problem.kind == "softmax":
+        return partial(_softmax_loss, a=a, y=b, num_classes=problem.num_classes)
+    raise ValueError(problem.kind)
+
+
+def global_objective(problem: Problem, x: jnp.ndarray) -> jnp.ndarray:
+    """sum_i f_i(x) — the objective of problem (1)."""
+    total = 0.0
+    for i in range(problem.num_agents):
+        total = total + make_local_loss(problem, i)(x)
+    return total
+
+
+def penalty_objective(problem: Problem, xs: jnp.ndarray, zs: jnp.ndarray,
+                      tau: float) -> jnp.ndarray:
+    """F(x, z) of eq. (3) (M=1) / eq. (10) (general M).
+
+    xs: [N, p] local models; zs: [M, p] tokens.
+    """
+    zs = jnp.atleast_2d(zs)
+    total = 0.0
+    for i in range(problem.num_agents):
+        total = total + make_local_loss(problem, i)(xs[i])
+    pen = 0.5 * tau * jnp.sum((xs[:, None, :] - zs[None, :, :]) ** 2)
+    return total + pen
+
+
+# ---------------------------------------------------------------------------
+# proximal solvers:  argmin_x f_i(x) + (tau/2) sum_m ||x - z_m||^2
+# ---------------------------------------------------------------------------
+
+
+def make_prox_solver(problem: Problem, agent: int, tau: float,
+                     num_tokens: int = 1, newton_steps: int = 20) -> Callable:
+    """Returns prox(z_sum, x0) -> x_new.
+
+    z_sum is sum_m z_m (only the sum enters the optimality condition).
+    x0 is the warm start (current local model), used by iterative solvers.
+    """
+    a = jnp.asarray(problem.features[agent])
+    m = float(num_tokens)
+
+    if problem.kind == "lsq":
+        b = jnp.asarray(problem.targets[agent])
+        d = a.shape[0]
+        gram = a.T @ a / d + tau * m * jnp.eye(a.shape[1])
+        atb = a.T @ b / d
+        chol = jax.scipy.linalg.cho_factor(gram)
+
+        def prox_lsq(z_sum, x0):
+            del x0
+            return jax.scipy.linalg.cho_solve(chol, atb + tau * z_sum)
+
+        return prox_lsq
+
+    loss = make_local_loss(problem, agent)
+
+    def objective(x, z_sum):
+        # sum_m ||x - z_m||^2 = M||x||^2 - 2<x, z_sum> + const
+        return loss(x) + 0.5 * tau * (m * jnp.vdot(x, x) - 2 * jnp.vdot(x, z_sum))
+
+    grad_fn = jax.grad(objective)
+
+    def prox_newton(z_sum, x0):
+        """Damped Newton with Hessian-vector CG; robust for logistic/softmax."""
+
+        def body(x, _):
+            g = grad_fn(x, z_sum)
+            hvp = lambda v: jax.jvp(lambda xx: grad_fn(xx, z_sum), (x,), (v,))[1]
+            step, _ = jax.scipy.sparse.linalg.cg(hvp, g, maxiter=20)
+            return x - step, None
+
+        x, _ = jax.lax.scan(body, x0, None, length=newton_steps)
+        return x
+
+    return prox_newton
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+
+def nmse(problem: Problem, x: np.ndarray) -> float:
+    """Test NMSE = ||A x - b||^2 / ||b||^2 (paper's regression metric)."""
+    a, b = problem.test_features, problem.test_targets
+    r = a @ np.asarray(x) - b
+    return float((r @ r) / (b @ b))
+
+
+def accuracy(problem: Problem, x: np.ndarray) -> float:
+    a, y = problem.test_features, problem.test_targets
+    x = np.asarray(x)
+    if problem.kind == "logistic":
+        pred = np.sign(a @ x)
+        pred[pred == 0] = 1
+        return float((pred == y).mean())
+    if problem.kind == "softmax":
+        w = x.reshape(a.shape[1], problem.num_classes)
+        pred = (a @ w).argmax(axis=1)
+        return float((pred == y).mean())
+    raise ValueError(problem.kind)
+
+
+def evaluate(problem: Problem, x: np.ndarray) -> float:
+    """Paper metric for the problem kind: NMSE (lower better) or accuracy."""
+    if problem.kind == "lsq":
+        return nmse(problem, x)
+    return accuracy(problem, x)

@@ -1,0 +1,238 @@
+"""Incremental decentralized methods: I-BCD (Alg. 1), API-BCD (Alg. 2), gAPI-BCD.
+
+All methods share a common token-walk interface consumed by both the serial
+driver (`repro.core.driver`) and the asynchronous event-driven simulator
+(`repro.core.simulator`): a method holds per-agent models x_i, M tokens z_m,
+and (for API-BCD) per-agent local token copies zhat_{i,m}; `update(state,
+agent, walk)` executes one activation — steps 3-6 of Alg. 1 / Alg. 2.
+
+State arrays are numpy on host (the convex experiments are small); the inner
+solves are jit'd JAX functions built in `repro.core.losses`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import losses as L
+
+
+@dataclasses.dataclass
+class MethodState:
+    """Mutable algorithm state (copied on update; arrays are replaced)."""
+
+    xs: np.ndarray            # [N, p] local models x_i
+    tokens: np.ndarray        # [M, p] token values z_m
+    zhat: Optional[np.ndarray] = None   # [N, M, p] local copies (API-BCD)
+    iteration: int = 0
+
+    def copy(self) -> "MethodState":
+        return MethodState(
+            xs=self.xs.copy(),
+            tokens=self.tokens.copy(),
+            zhat=None if self.zhat is None else self.zhat.copy(),
+            iteration=self.iteration,
+        )
+
+
+class IncrementalMethod:
+    """Base class for token-walk methods."""
+
+    name: str = "base"
+
+    def __init__(self, problem: L.Problem, num_walks: int = 1):
+        self.problem = problem
+        self.num_walks = num_walks
+
+    def init(self) -> MethodState:
+        """Initialization per Alg. 1/2 step 1: x_i^0 = 0, z_m^0 = 0.
+
+        This satisfies the required token initialization (6):
+        z^0 = (1/N) sum_i x_i^0 = 0, and keeps the invariant
+        z_m^k = (1/N) sum_i x_i^k under the incremental update (8)/(12b).
+        """
+        n, p = self.problem.num_agents, self.problem.dim
+        m = self.num_walks
+        zhat = np.zeros((n, m, p)) if self.uses_local_copies else None
+        return MethodState(
+            xs=np.zeros((n, p)), tokens=np.zeros((m, p)), zhat=zhat)
+
+    uses_local_copies: bool = False
+
+    def update(self, state: MethodState, agent: int, walk: int) -> MethodState:
+        raise NotImplementedError
+
+    def model_estimate(self, state: MethodState) -> np.ndarray:
+        """Global model estimate: mean_i x_i.
+
+        For M=1 this equals the token exactly (invariant of eq. (8));
+        for physical API-BCD it equals sum_m z_m (each delta is credited
+        to exactly one token, eq. (12b)), which is the consensus model —
+        averaging tokens would under-scale by 1/M.
+        """
+        return state.xs.mean(axis=0)
+
+    def flops_per_update(self) -> float:
+        """Rough per-activation compute cost (for the time simulator)."""
+        # default: one pass over the local data, 2*d*p flops for grad-like work
+        d = int(np.mean([f.shape[0] for f in self.problem.features]))
+        return 4.0 * d * self.problem.dim
+
+
+class IBCD(IncrementalMethod):
+    """Incremental BCD — Algorithm 1.
+
+    Single token (M=1); the active agent solves the exact proximal
+    subproblem (7) and applies the incremental token update (8).
+    """
+
+    name = "I-BCD"
+
+    def __init__(self, problem: L.Problem, tau: float, newton_steps: int = 20):
+        super().__init__(problem, num_walks=1)
+        self.tau = tau
+        self._prox = [
+            jax.jit(L.make_prox_solver(problem, i, tau, 1, newton_steps))
+            for i in range(problem.num_agents)
+        ]
+
+    def update(self, state: MethodState, agent: int, walk: int = 0) -> MethodState:
+        n = self.problem.num_agents
+        s = state.copy()
+        z = s.tokens[0]
+        x_old = s.xs[agent].copy()
+        x_new = np.asarray(self._prox[agent](jnp.asarray(z), jnp.asarray(x_old)))
+        s.xs[agent] = x_new
+        s.tokens[0] = z + (x_new - x_old) / n          # eq. (8)
+        s.iteration += 1
+        return s
+
+    def flops_per_update(self) -> float:
+        # exact prox: cholesky solve ~ p^2, plus data pass
+        d = int(np.mean([f.shape[0] for f in self.problem.features]))
+        p = self.problem.dim
+        return 2.0 * d * p + 2.0 * p * p
+
+
+class APIBCD(IncrementalMethod):
+    """Asynchronous Parallel Incremental BCD — Algorithm 2.
+
+    M tokens walk in parallel; each agent keeps local copies zhat_{i,m} of
+    every token. On activation by token m (steps 3-6):
+      zhat_{i,m} <- z_m (received token)               step 3
+      x_i <- argmin f_i + (tau/2) sum_m ||x - zhat_{i,m}||^2   (12a)
+      z_m <- z_m + (x_i_new - x_i_old)/N               (12b)
+      zhat_{i,m} <- z_m^{new}                          (12c)
+    """
+
+    name = "API-BCD"
+    uses_local_copies = True
+
+    def __init__(self, problem: L.Problem, tau: float, num_walks: int,
+                 newton_steps: int = 20):
+        super().__init__(problem, num_walks=num_walks)
+        self.tau = tau
+        self._prox = [
+            jax.jit(L.make_prox_solver(problem, i, tau, num_walks, newton_steps))
+            for i in range(problem.num_agents)
+        ]
+
+    def update(self, state: MethodState, agent: int, walk: int) -> MethodState:
+        n = self.problem.num_agents
+        s = state.copy()
+        s.zhat[agent, walk] = s.tokens[walk]            # step 3: receive token
+        z_sum = s.zhat[agent].sum(axis=0)
+        x_old = s.xs[agent].copy()
+        x_new = np.asarray(
+            self._prox[agent](jnp.asarray(z_sum), jnp.asarray(x_old)))
+        s.xs[agent] = x_new                              # (12a)
+        s.tokens[walk] = s.tokens[walk] + (x_new - x_old) / n   # (12b)
+        s.zhat[agent, walk] = s.tokens[walk]             # (12c)
+        s.iteration += 1
+        return s
+
+    def update_fresh(self, state: MethodState, agent: int) -> MethodState:
+        """Fresh-token synchronous logical view — the setting of Theorem 2.
+
+        All agents share fresh tokens (zhat_{i,m} = z_m for all i), and the
+        incremental update (12b) is applied to every token m in M (as in the
+        proof's identity (e), which requires z_m^{k+1} = mean_i x_i^{k+1}
+        for all m). This is also the view the mesh runtime realizes.
+        """
+        n = self.problem.num_agents
+        s = state.copy()
+        s.zhat[:] = s.tokens[None, :, :]
+        z_sum = s.tokens.sum(axis=0)
+        x_old = s.xs[agent].copy()
+        x_new = np.asarray(
+            self._prox[agent](jnp.asarray(z_sum), jnp.asarray(x_old)))
+        s.xs[agent] = x_new
+        s.tokens = s.tokens + (x_new - x_old)[None, :] / n      # (12b) all m
+        s.zhat[:] = s.tokens[None, :, :]
+        s.iteration += 1
+        return s
+
+    def flops_per_update(self) -> float:
+        d = int(np.mean([f.shape[0] for f in self.problem.features]))
+        p = self.problem.dim
+        return 2.0 * d * p + 2.0 * p * p
+
+
+class GAPIBCD(IncrementalMethod):
+    """Gradient-based API-BCD (Remark 1, eq. 15).
+
+    First-order surrogate + proximal term rho; closed-form update
+        x_i <- (rho x_i - grad f_i(x_i) + tau sum_m zhat_{i,m}) / (rho + tau M)
+    which needs one gradient instead of an inner solve. Thm 3 requires
+    tau*M/2 + rho - L/2 >= 0 for descent.
+    """
+
+    name = "gAPI-BCD"
+    uses_local_copies = True
+
+    def __init__(self, problem: L.Problem, tau: float, num_walks: int,
+                 rho: float):
+        super().__init__(problem, num_walks=num_walks)
+        self.tau = tau
+        self.rho = rho
+        self._grad = [
+            jax.jit(jax.grad(L.make_local_loss(problem, i)))
+            for i in range(problem.num_agents)
+        ]
+
+    def update(self, state: MethodState, agent: int, walk: int) -> MethodState:
+        n, m = self.problem.num_agents, self.num_walks
+        s = state.copy()
+        s.zhat[agent, walk] = s.tokens[walk]
+        z_sum = s.zhat[agent].sum(axis=0)
+        x_old = s.xs[agent].copy()
+        g = np.asarray(self._grad[agent](jnp.asarray(x_old)))
+        x_new = (self.rho * x_old - g + self.tau * z_sum) / (self.rho + self.tau * m)
+        s.xs[agent] = x_new                              # (15) closed form
+        s.tokens[walk] = s.tokens[walk] + (x_new - x_old) / n
+        s.zhat[agent, walk] = s.tokens[walk]
+        s.iteration += 1
+        return s
+
+    def update_fresh(self, state: MethodState, agent: int) -> MethodState:
+        """Fresh-token logical view for gAPI-BCD — the setting of Theorem 3."""
+        n, m = self.problem.num_agents, self.num_walks
+        s = state.copy()
+        s.zhat[:] = s.tokens[None, :, :]
+        z_sum = s.tokens.sum(axis=0)
+        x_old = s.xs[agent].copy()
+        g = np.asarray(self._grad[agent](jnp.asarray(x_old)))
+        x_new = (self.rho * x_old - g + self.tau * z_sum) / (self.rho + self.tau * m)
+        s.xs[agent] = x_new
+        s.tokens = s.tokens + (x_new - x_old)[None, :] / n
+        s.zhat[:] = s.tokens[None, :, :]
+        s.iteration += 1
+        return s
+
+    def flops_per_update(self) -> float:
+        d = int(np.mean([f.shape[0] for f in self.problem.features]))
+        return 4.0 * d * self.problem.dim

@@ -1,0 +1,5 @@
+from repro.data.synthetic import (  # noqa: F401
+    DATASETS,
+    make_problem,
+    surrogate_dataset,
+)

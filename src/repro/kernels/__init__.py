@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Kernels (each VMEM-tiled with explicit BlockSpecs, validated against the
+pure-jnp oracles in ref.py via interpret mode on CPU):
+
+  * prox_update      — fused gAPI-BCD closed-form update (the paper's
+                       per-superstep hot-spot: one pass over parameters).
+  * flash_attention  — blockwise online-softmax attention (GQA, causal,
+                       sliding window); scores never leave VMEM.
+  * decode_attention — single-token GQA attention over a long KV cache,
+                       KV-length-blocked with running max/sum merge.
+  * rwkv6_scan       — RWKV6 data-dependent-decay WKV recurrence,
+                       time-chunked with on-chip [dk, dv] state.
+  * rglru_scan       — RG-LRU gated linear recurrence, time-chunked.
+
+ops.py exposes jit-ready wrappers (auto interpret on non-TPU backends);
+ref.py holds the oracles.
+"""

@@ -1,0 +1,95 @@
+"""Single-token GQA decode attention over a long KV cache.
+
+Grid: (batch*kv_heads, num_kv_blocks); all G query heads of one kv head
+are processed together as a [G, hd] tile (MXU-friendly when G*hd >= 128).
+The KV length is blocked; running max/sum/accumulator live in scratch —
+flash-decoding within a chip. Length masking supports partially-filled
+ring caches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, block_k, seq_k, valid_len):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)             # [G, hd]
+    k = k_ref[0].astype(jnp.float32)             # [bk, hd]
+    v = v_ref[0].astype(jnp.float32)
+    # zero padded/invalid kv rows (0 * garbage = NaN otherwise)
+    limit_rows = seq_k if valid_len is None else valid_len
+    v_rows = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, v.shape, 0)
+    v = jnp.where(v_rows < limit_rows, v, 0.0)
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale     # [G, bk]
+    kv_idx = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, logits.shape, 1)
+    limit = seq_k if valid_len is None else valid_len
+    logits = jnp.where(kv_idx < limit, logits, _NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, logits.max(axis=1, keepdims=True))
+    p = jnp.exp(logits - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = (acc_scr[...] * corr
+                    + jax.lax.dot_general(
+                        p, v, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _emit():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_grouped(q, k, v, *, scale=None, valid_len=None,
+                             block_k=512, interpret=False):
+    """q: [BKV, G, hd]; k, v: [BKV, T, hd]. Returns [BKV, G, hd]."""
+    bkv, g, hd = q.shape
+    t = k.shape[1]
+    scale = scale if scale is not None else float(1.0 / np.sqrt(hd))
+    block_k = min(block_k, t)
+    grid = (bkv, pl.cdiv(t, block_k))
+
+    kern = functools.partial(_kernel, scale=scale, block_k=block_k,
+                             seq_k=t, valid_len=valid_len)
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, g, hd), lambda b, ki: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, hd), lambda b, ki: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bkv, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

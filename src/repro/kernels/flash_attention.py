@@ -1,0 +1,114 @@
+"""Blockwise (flash) attention kernel: online softmax, GQA, causal/window.
+
+Grid: (batch*q_heads, num_q_blocks, num_kv_blocks); the kv dimension is
+innermost (sequential on TPU), so the [block_q, head_dim] accumulator and
+the running max/sum live in VMEM scratch across kv steps. GQA is handled
+in the k/v index maps (kv head = q head // group) — k/v are never
+materialized per-q-head.
+
+Scores exist only as a [block_q, block_k] VMEM tile: this is exactly the
+HBM-traffic delta vs the XLA-lowered reference quantified in
+EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, causal, window, block_q, block_k, seq_k):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)            # [bq, hd]
+    k = k_ref[0].astype(jnp.float32)            # [bk, hd]
+    v = v_ref[0].astype(jnp.float32)
+    # zero padded kv rows: p is ~0 there but 0 * garbage(NaN) = NaN
+    kv_rows = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, v.shape, 0)
+    v = jnp.where(kv_rows < seq_k, v, 0.0)
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale   # [bq, bk]
+
+    q_idx = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    kv_idx = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = kv_idx < seq_k                        # kv padding
+    if causal:
+        mask &= kv_idx <= q_idx
+    if window > 0:
+        mask &= kv_idx > q_idx - window
+    logits = jnp.where(mask, logits, _NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, logits.max(axis=1, keepdims=True))
+    p = jnp.exp(logits - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = (acc_scr[...] * corr
+                    + jax.lax.dot_general(
+                        p, v, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _emit():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal=True, window=0, scale=None,
+                         block_q=128, block_k=128, interpret=False):
+    """q: [BH, S, hd]; k, v: [BKV, T, hd] with BH = BKV * G.
+
+    Returns [BH, S, hd]."""
+    bh, s, hd = q.shape
+    bkv, t, _ = k.shape
+    group = bh // bkv
+    scale = scale if scale is not None else float(1.0 / np.sqrt(hd))
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    grid = (bh, pl.cdiv(s, block_q), pl.cdiv(t, block_k))
+
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, seq_k=t)
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, block_k, hd),
+                         lambda h, qi, ki, g=group: (h // g, ki, 0)),
+            pl.BlockSpec((1, block_k, hd),
+                         lambda h, qi, ki, g=group: (h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd),
+                               lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,133 @@
+"""Jit-ready wrappers around the Pallas kernels.
+
+Shape plumbing between model layouts ([B,S,H,hd] etc.) and kernel layouts
+([BH,S,hd] etc.), plus automatic interpret mode on non-TPU backends so the
+whole suite runs (and is tested) on CPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention_grouped
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.prox_update import LANE, prox_update_2d
+from repro.kernels.rglru_scan import rglru_scan_bsw
+from repro.kernels.rwkv6_scan import rwkv6_scan_bh
+
+
+def _interpret_default(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+# ---------------------------------------------------------------------------
+# prox update over pytrees
+# ---------------------------------------------------------------------------
+
+
+def prox_update(x, g, zsum, *, tau, rho, num_walks, num_agents,
+                interpret=None):
+    """Fused gAPI-BCD update on a single array (any shape).
+
+    Returns (x_new, delta) — see kernels/prox_update.py."""
+    interpret = _interpret_default(interpret)
+    shape = x.shape
+    n = x.size
+    pad = (-n) % LANE
+    def tile(a):
+        flat = a.reshape(-1)
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        return flat.reshape(-1, LANE)
+    x2, g2, z2 = tile(x), tile(g), tile(zsum)
+    x_new, delta = prox_update_2d(x2, g2, z2, tau=tau, rho=rho,
+                                  num_walks=num_walks,
+                                  num_agents=num_agents,
+                                  interpret=interpret)
+    def untile(a, dtype):
+        flat = a.reshape(-1)
+        if pad:
+            flat = flat[:n]
+        return flat.reshape(shape).astype(dtype)
+    return untile(x_new, x.dtype), untile(delta, jnp.float32)
+
+
+def prox_update_tree(xs, gs, zsums, *, tau, rho, num_walks, num_agents,
+                     interpret=None):
+    """Pytree version: returns (new_params, deltas)."""
+    pairs = jax.tree.map(
+        lambda x, g, z: prox_update(x, g, z, tau=tau, rho=rho,
+                                    num_walks=num_walks,
+                                    num_agents=num_agents,
+                                    interpret=interpret),
+        xs, gs, zsums)
+    new = jax.tree.map(lambda p: p[0], pairs,
+                       is_leaf=lambda p: isinstance(p, tuple))
+    delta = jax.tree.map(lambda p: p[1], pairs,
+                         is_leaf=lambda p: isinstance(p, tuple))
+    return new, delta
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
+                    block_q=128, block_k=128, interpret=None):
+    """q: [B,S,H,hd]; k, v: [B,T,KV,hd]. Returns [B,S,H,hd]."""
+    interpret = _interpret_default(interpret)
+    b, s, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kv, t, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kv, t, hd)
+    out = flash_attention_bhsd(qf, kf, vf, causal=causal, window=window,
+                               scale=scale, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+    return out.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+
+
+def decode_attention(q, k, v, *, scale=None, valid_len=None, block_k=512,
+                     interpret=None):
+    """q: [B,H,hd]; k, v: [B,T,KV,hd]. Returns [B,H,hd]."""
+    interpret = _interpret_default(interpret)
+    b, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qf = q.reshape(b, kv, g, hd).reshape(b * kv, g, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kv, t, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kv, t, hd)
+    out = decode_attention_grouped(qf, kf, vf, scale=scale,
+                                   valid_len=valid_len, block_k=block_k,
+                                   interpret=interpret)
+    return out.reshape(b, kv, g, hd).reshape(b, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# recurrences
+# ---------------------------------------------------------------------------
+
+
+def rwkv6_scan(r, k, v, w, u, *, chunk=128, interpret=None):
+    """r,k,v,w: [B,H,S,hd]; u: [H,hd]. Returns out [B,H,S,hd]."""
+    interpret = _interpret_default(interpret)
+    b, h, s, hd = r.shape
+    def fold(a):
+        return a.reshape(b * h, s, hd)
+    ub = jnp.broadcast_to(u[None, :, None, :], (b, h, 1, hd)
+                          ).reshape(b * h, 1, hd)
+    out = rwkv6_scan_bh(fold(r), fold(k), fold(v), fold(w), ub,
+                        chunk=chunk, interpret=interpret)
+    return out.reshape(b, h, s, hd)
+
+
+def rglru_scan(a, u, *, chunk=128, block_w=512, interpret=None):
+    """a, u: [B,S,W] -> h [B,S,W]."""
+    interpret = _interpret_default(interpret)
+    return rglru_scan_bsw(a, u, chunk=chunk, block_w=block_w,
+                          interpret=interpret)

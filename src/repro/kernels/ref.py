@@ -1,0 +1,106 @@
+"""Pure-jnp oracles for every kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def prox_update(x, g, zsum, *, tau, rho, num_walks, num_agents):
+    """gAPI-BCD closed form (eq. 15) + incremental token delta (eq. 12b).
+
+    Returns (x_new, token_delta) with token_delta = (x_new - x)/N.
+    """
+    denom = rho + tau * num_walks
+    xf = x.astype(jnp.float32)
+    x_new = (rho * xf - g.astype(jnp.float32)
+             + tau * zsum.astype(jnp.float32)) / denom
+    delta = (x_new - xf) / num_agents
+    return x_new.astype(x.dtype), delta.astype(jnp.float32)
+
+
+def attention(q, k, v, *, causal=True, window=0, scale=None):
+    """q: [B,H,S,hd]; k,v: [B,KV,T,hd] (H = KV*G). Returns [B,H,S,hd]."""
+    b, h, s, hd = q.shape
+    kvh, t = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = scale if scale is not None else float(1.0 / np.sqrt(hd))
+    kq = jnp.repeat(k, g, axis=1)
+    vq = jnp.repeat(v, g, axis=1)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        kq.astype(jnp.float32)) * scale
+    q_idx = jnp.arange(s)[:, None]
+    kv_idx = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kv_idx <= q_idx
+    if window > 0:
+        mask &= kv_idx > q_idx - window
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", p, vq.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k, v, *, valid_len=None, scale=None):
+    """q: [B,H,hd]; k,v: [B,KV,T,hd]. Returns [B,H,hd]."""
+    b, h, hd = q.shape
+    kvh, t = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = scale if scale is not None else float(1.0 / np.sqrt(hd))
+    kq = jnp.repeat(k, g, axis=1)
+    vq = jnp.repeat(v, g, axis=1)
+    logits = jnp.einsum("bhd,bhtd->bht", q.astype(jnp.float32),
+                        kq.astype(jnp.float32)) * scale
+    if valid_len is not None:
+        logits = jnp.where(jnp.arange(t)[None, None] < valid_len,
+                           logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bht,bhtd->bhd", p, vq.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rwkv6(r, k, v, w, u, state=None):
+    """RWKV6 WKV recurrence. r,k,v,w: [B,H,S,hd]; u: [H,hd].
+
+    out_t = r_t (S_{t-1} + diag(u) k_t^T v_t);  S_t = diag(w_t) S_{t-1}
+            + k_t^T v_t.
+    Returns (out [B,H,S,hd], final state [B,H,hd,hd]).
+    """
+    b, h, s, hd = r.shape
+    if state is None:
+        state = jnp.zeros((b, h, hd, hd), jnp.float32)
+
+    def step(st, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhk,bhkv->bhv", rt,
+                         st + u[None, :, :, None].astype(jnp.float32) * kv)
+        st = wt[..., :, None] * st + kv
+        return st, out
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 2, 0)
+               for a in (r, k, v, w))
+    final, outs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(outs, 0, 2).astype(r.dtype), final
+
+
+def rglru(a, u, h0=None):
+    """Gated linear recurrence h_t = a_t * h_{t-1} + u_t.
+
+    a, u: [B, S, W] (a in (0,1), u pre-scaled by sqrt(1-a^2)*i*x).
+    Returns (h [B,S,W], final h [B,W]).
+    """
+    b, s, w = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((b, w), jnp.float32)
+
+    def step(h, inp):
+        at, ut = inp
+        h = at * h + ut
+        return h, h
+
+    xs = (jnp.moveaxis(a.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(u.astype(jnp.float32), 1, 0))
+    final, hs = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(hs, 0, 1).astype(a.dtype), final

@@ -1,0 +1,54 @@
+"""RG-LRU gated linear recurrence kernel: h_t = a_t * h_{t-1} + u_t.
+
+Grid: (batch, num_width_blocks, num_time_chunks) — time innermost so the
+[block_w] hidden state stays in VMEM scratch across chunks; width is
+blocked to bound VMEM. Within a chunk, the recurrence runs as a
+sequential fori_loop of vectorized elementwise updates (the VPU pattern;
+a log-depth associative scan is possible but the elementwise chain is
+bandwidth-bound anyway).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, u_ref, o_ref, h_scr, *, chunk):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    def step(t, h):
+        at = a_ref[0, t].astype(jnp.float32)
+        ut = u_ref[0, t].astype(jnp.float32)
+        h = at * h + ut
+        o_ref[0, t] = h.astype(o_ref.dtype)
+        return h
+
+    h_scr[...] = jax.lax.fori_loop(0, chunk, step, h_scr[...])
+
+
+def rglru_scan_bsw(a, u, *, chunk=128, block_w=512, interpret=False):
+    """a, u: [B, S, W]. Returns h: [B, S, W]."""
+    b, s, w = a.shape
+    chunk = min(chunk, s)
+    block_w = min(block_w, w)
+    grid = (b, pl.cdiv(w, block_w), pl.cdiv(s, chunk))
+    spec = pl.BlockSpec((1, chunk, block_w), lambda bi, wi, ti: (bi, ti, wi))
+
+    kern = functools.partial(_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b, s, w), a.dtype),
+        scratch_shapes=[pltpu.VMEM((block_w,), jnp.float32)],
+        interpret=interpret,
+    )(a, u)

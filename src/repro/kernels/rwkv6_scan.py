@@ -1,0 +1,64 @@
+"""RWKV6 WKV recurrence kernel: time-chunked, state-resident scan.
+
+Grid: (batch*heads, num_time_chunks); the [dk, dv] WKV state stays in
+VMEM scratch across chunks (the HBM-resident alternative would stream the
+state in/out every step — the whole point of the TPU adaptation is that
+the state lives on-chip for the entire sequence). Within a chunk the
+recurrence is a sequential fori_loop of rank-1 updates:
+
+    out_t = r_t @ (S + (u * k_t) outer v_t)
+    S     = w_t[:, None] * S + k_t outer v_t
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_scr, *,
+            chunk, head_dim):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    u = u_ref[0].astype(jnp.float32)             # [1, hd] -> row
+
+    def step(t, state):
+        rt = r_ref[0, t].astype(jnp.float32)     # [hd]
+        kt = k_ref[0, t].astype(jnp.float32)
+        vt = v_ref[0, t].astype(jnp.float32)
+        wt = w_ref[0, t].astype(jnp.float32)
+        # out = r @ S + (r . (u*k)) * v   (bonus term never materializes)
+        out = rt @ state + jnp.sum(rt * u[0] * kt) * vt
+        o_ref[0, t] = out.astype(o_ref.dtype)
+        return wt[:, None] * state + kt[:, None] * vt[None, :]
+
+    s_scr[...] = jax.lax.fori_loop(0, chunk, step, s_scr[...])
+
+
+def rwkv6_scan_bh(r, k, v, w, u, *, chunk=128, interpret=False):
+    """r,k,v,w: [BH, S, hd]; u: [BH, 1, hd]. Returns out [BH, S, hd].
+
+    (u is per-head; callers broadcast it to the BH layout.)"""
+    bh, s, hd = r.shape
+    chunk = min(chunk, s)
+    grid = (bh, pl.cdiv(s, chunk))
+    seq_spec = pl.BlockSpec((1, chunk, hd), lambda b, t: (b, t, 0))
+    u_spec = pl.BlockSpec((1, 1, hd), lambda b, t: (b, 0, 0))
+
+    kern = functools.partial(_kernel, chunk=chunk, head_dim=hd)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec, u_spec],
+        out_specs=seq_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), r.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)

@@ -1,0 +1,43 @@
+"""Production meshes.
+
+make_production_mesh: the assignment-specified mesh — (16, 16)
+("data", "model") single pod (256 chips, TPU v5e), or (2, 16, 16)
+("pod", "data", "model") for 2 pods = 512 chips.
+
+make_training_mesh: the API-BCD *training view* of the same devices —
+("agent", "replica", "model"): A agents in a ring (token ppermute axis),
+G = data/A replica rows per agent (FSDP within agent), model axis
+unchanged. Functions, not module constants, so importing never touches
+jax device state.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_training_mesh(num_agents: int, model_parallel: int = 16, *,
+                       multi_pod: bool = False):
+    """Reshape the production devices into ("agent", "replica", "model").
+
+    model_parallel is the TP width within an agent (sized per-arch so head
+    and FFN dims divide); the remaining factor becomes the FSDP "replica"
+    axis. The agent axis spans pods first in the multi-pod case (device
+    array is pod-major), so with A >= 2 the token ring crosses the pod
+    boundary — the multi-pod dry-run proves that hop lowers.
+    """
+    base = make_production_mesh(multi_pod=multi_pod)
+    devs = base.devices.reshape(-1)                 # pod-major order
+    total = 512 if multi_pod else 256
+    assert total % (num_agents * model_parallel) == 0, (
+        num_agents, model_parallel, total)
+    replica = total // (num_agents * model_parallel)
+    return Mesh(devs.reshape(num_agents, replica, model_parallel),
+                ("agent", "replica", "model"))

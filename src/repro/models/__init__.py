@@ -1,0 +1,5 @@
+from repro.models.model import (  # noqa: F401
+    build_model,
+    init_params,
+    input_specs,
+)

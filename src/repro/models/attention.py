@@ -1,0 +1,390 @@
+"""Attention: GQA (full/sliding-window/local), MLA, cross-attention.
+
+Prefill/training uses a memory-efficient chunked ("flash-style") reference
+in pure jnp — peak activation is O(q_chunk * kv_chunk) instead of O(S^2) —
+so 32k prefill lowers within HBM even before the Pallas kernel is used.
+The Pallas TPU kernels in repro.kernels implement the same math; model code
+switches via use_pallas (CPU/dry-run keeps the jnp path).
+
+Decode uses single-token attention against a KV cache; for MLA the decode
+path uses the *absorbed* formulation (attention in the compressed latent
+space, O(kv_lora) per position instead of materializing K/V).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.hints import shard_hint
+from repro.models.layers import _he, apply_rope, rmsnorm, rmsnorm_init
+
+_NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# GQA projections
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(key, cfg, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _he(ks[0], (d, h * hd), dtype),
+        "wk": _he(ks[1], (d, kv * hd), dtype),
+        "wv": _he(ks[2], (d, kv * hd), dtype),
+        "wo": _he(ks[3], (h * hd, d), dtype, fan_in=h * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _project_qkv(params, cfg, x, positions):
+    """x [B,S,D] -> q [B,S,KV,G,hd], k/v [B,S,KV,hd] with rope applied."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // kv
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = q.reshape(b, s, kv, g, hd)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash-style) attention — jnp reference used for train/prefill
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(q, k, v, *, causal=True, window=0,
+                      q_chunk=1024, kv_chunk=1024, q_offset=0):
+    """Online-softmax attention with O(chunk^2) activation memory.
+
+    q: [B, S, KV, G, hd]; k, v: [B, T, KV, hd].
+    window > 0 limits attention to the last `window` positions (inclusive).
+    q_offset: absolute position of q[0] (for cross-chunk decode/prefill).
+    Returns [B, S, KV, G, hd].
+
+    Internally everything is head-major [B, H, s, hd] (k/v broadcast over
+    the GQA group): head dims shard cleanly under GSPMD, so the chunk
+    loops stay collective-free on a TP mesh (the [b,s,kv,g,hd] layout
+    provoked contraction-sharded score all-reduces every chunk).
+    """
+    b, s, kvh, g, hd = q.shape
+    hd_v = v.shape[-1]                 # may differ from qk dim (MLA)
+    t = k.shape[1]
+    h = kvh * g
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, t)
+
+    # head-major layouts
+    qh = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)       # [b,h,s,hd]
+    kh = jnp.broadcast_to(k[:, :, :, None, :],
+                          (b, t, kvh, g, hd)).reshape(b, t, h, hd)
+    kh = kh.transpose(0, 2, 1, 3)                            # [b,h,t,hd]
+    vh = jnp.broadcast_to(v[:, :, :, None, :],
+                          (b, t, kvh, g, hd_v)).reshape(b, t, h, hd_v)
+    vh = vh.transpose(0, 2, 1, 3)                            # [b,h,t,hd_v]
+
+    s_pad = -s % q_chunk
+    t_pad = -t % kv_chunk
+    if s_pad:
+        qh = jnp.pad(qh, ((0, 0), (0, 0), (0, s_pad), (0, 0)))
+    if t_pad:
+        kh = jnp.pad(kh, ((0, 0), (0, 0), (0, t_pad), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, 0), (0, t_pad), (0, 0)))
+    nq, nkv = (s + s_pad) // q_chunk, (t + t_pad) // kv_chunk
+
+    scale = float(1.0 / np.sqrt(hd))
+    qh = qh.reshape(b, h, nq, q_chunk, hd)
+    kh = kh.reshape(b, h, nkv, kv_chunk, hd)
+    vh = vh.reshape(b, h, nkv, kv_chunk, hd_v)
+    # pin head sharding on the loop-stacked buffers (GSPMD otherwise may
+    # shard the contraction dim and all-reduce every score chunk)
+    qh = shard_hint(qh, ("replica", "data"), "model")
+    kh = shard_hint(kh, ("replica", "data"), "model")
+    vh = shard_hint(vh, ("replica", "data"), "model")
+
+    def q_block(carry_q):
+        qi, qblk = carry_q                       # qblk [b,h,qc,hd]
+        q_idx = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, kblk, vblk = inp                 # [b,h,kc,hd]
+            kv_idx = ki * kv_chunk + jnp.arange(kv_chunk)
+            logits = jnp.einsum("bhqd,bhcd->bhqc",
+                                qblk.astype(jnp.float32),
+                                kblk.astype(jnp.float32)) * scale
+            logits = shard_hint(logits, ("replica", "data"), "model")
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= kv_idx[None, :] <= q_idx[:, None]
+            if window > 0:
+                mask &= kv_idx[None, :] > q_idx[:, None] - window
+            mask &= (kv_idx < t)[None, :]        # padding
+            logits = jnp.where(mask[None, None], logits, _NEG_INF)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqc,bhcd->bhqd", p, vblk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, q_chunk), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, h, q_chunk, hd_v), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nkv), jnp.moveaxis(kh, 2, 0),
+             jnp.moveaxis(vh, 2, 0)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out                               # [b,h,qc,hd_v]
+
+    # flash semantics: recompute the inner kv scan in backward instead of
+    # saving per-chunk probabilities (otherwise backward holds O(S^2))
+    outs = jax.lax.map(jax.checkpoint(q_block),
+                       (jnp.arange(nq), jnp.moveaxis(qh, 2, 0)))
+    # outs: [nq, b, h, qc, hd_v] -> [b, s, kv, g, hd_v]
+    out = jnp.moveaxis(outs, 0, 2)               # [b,h,nq,qc,hd_v]
+    out = out.reshape(b, h, nq * q_chunk, hd_v)[:, :, :s]
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, kvh, g, hd_v)
+    return out.astype(v.dtype)
+
+
+def gqa_prefill(params, cfg, x, positions, window=0):
+    """Full prefill/training attention. Returns [B,S,D]."""
+    b, s, d = x.shape
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    win = window if window else cfg.attn_window
+    out = chunked_attention(q, k, v, causal=True, window=win)
+    out = out.reshape(b, s, cfg.num_heads * cfg.head_dim)
+    return out @ params["wo"], (k, v)
+
+
+# ---------------------------------------------------------------------------
+# decode attention (one new token vs KV cache)
+# ---------------------------------------------------------------------------
+
+
+def ring_insert(buf, entry, ptr):
+    """buf [B,T,...], entry [B,...] -> write at slot ptr % T.
+
+    ptr is the running token count, so slot i%T always holds token i —
+    ring eviction drops the oldest cached token.
+    """
+    t = buf.shape[1]
+    return jax.lax.dynamic_update_index_in_dim(
+        buf, entry[:, None].astype(buf.dtype), ptr % t, axis=1
+    ).reshape(buf.shape)
+
+
+def prefill_cache_entries(seq_entries, capacity, s):
+    """Store the last `capacity` of s prefill entries so slot i%T holds
+    token i (consistent ring eviction in subsequent decode). Pads with
+    zeros when the prompt is shorter than the capacity (slots >= s are
+    masked out by the decode validity mask until written)."""
+    t = capacity
+    if s < t:
+        pad = [(0, 0)] * seq_entries.ndim
+        pad[1] = (0, t - s)
+        return jnp.pad(seq_entries, pad)
+    kept = seq_entries[:, -t:]
+    if s > t:
+        kept = jnp.roll(kept, shift=s % t, axis=1)
+    return kept
+
+
+def gqa_decode(params, cfg, x, cache, position, window=0):
+    """x: [B,1,D]; cache: {k, v: [B,T,KV,hd], ptr} (ptr = tokens written).
+
+    Inserts the new token's K/V first, then attends over all valid slots
+    (so the token attends to itself); returns ([B,1,D], new cache).
+    """
+    del window
+    b = x.shape[0]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    pos = jnp.full((b, 1), position) if jnp.ndim(position) == 0 else position
+    q, k_new, v_new = _project_qkv(params, cfg, x, pos)
+    q = q[:, 0]                                   # [B,KV,G,hd]
+
+    t = cache["k"].shape[1]
+    ck = ring_insert(cache["k"], k_new[:, 0], cache["ptr"])
+    cv = ring_insert(cache["v"], v_new[:, 0], cache["ptr"])
+    num_valid = jnp.minimum(cache["ptr"] + 1, t)
+
+    logits = jnp.einsum("bkgh,btkh->bkgt", q.astype(jnp.float32),
+                        ck.astype(jnp.float32)) * float(1.0 / np.sqrt(hd))
+    valid = jnp.arange(t) < num_valid
+    logits = jnp.where(valid[None, None, None], logits, _NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", p, cv.astype(jnp.float32))
+    out = out.reshape(b, 1, h * hd).astype(x.dtype)
+    new_cache = {"k": ck, "v": cv, "ptr": cache["ptr"] + 1}
+    return out @ params["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key, cfg, dtype):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wq_a": _he(ks[0], (d, m.q_lora_rank), dtype),
+        "q_norm": rmsnorm_init(m.q_lora_rank, dtype),
+        "wq_b": _he(ks[1], (m.q_lora_rank, h * qk), dtype),
+        "wkv_a": _he(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), dtype),
+        "kv_norm": rmsnorm_init(m.kv_lora_rank, dtype),
+        "wk_b": _he(ks[3], (m.kv_lora_rank, h * m.qk_nope_head_dim), dtype),
+        "wv_b": _he(ks[4], (m.kv_lora_rank, h * m.v_head_dim), dtype),
+        "wo": _he(ks[5], (h * m.v_head_dim, d), dtype, fan_in=h * m.v_head_dim),
+    }
+
+
+def _mla_q(params, cfg, x, positions):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = rmsnorm(params["q_norm"], x @ params["wq_a"]) @ params["wq_b"]
+    q = q.reshape(b, s, h, qk)
+    q_nope, q_pe = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def _mla_ckv(params, cfg, x, positions):
+    m = cfg.mla
+    kv = x @ params["wkv_a"]
+    c_kv, k_pe = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(params["kv_norm"], c_kv)
+    k_pe = apply_rope(k_pe[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_pe                              # [B,S,r], [B,S,rope]
+
+
+def mla_prefill(params, cfg, x, positions):
+    """Non-absorbed MLA for prefill (materializes K/V, chunked attention)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    q_nope, q_pe = _mla_q(params, cfg, x, positions)
+    c_kv, k_pe = _mla_ckv(params, cfg, x, positions)
+    k_nope = (c_kv @ params["wk_b"]).reshape(b, s, h, m.qk_nope_head_dim)
+    v = (c_kv @ params["wv_b"]).reshape(b, s, h, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe[:, :, None, :],
+                                  (b, s, h, m.qk_rope_head_dim))], axis=-1)
+    # MLA has no KV grouping: kv heads == heads, group g=1
+    out = chunked_attention(q[:, :, :, None, :].reshape(
+        b, s, h, 1, q.shape[-1]), k, v, causal=True)
+    out = out.reshape(b, s, h * m.v_head_dim)
+    return out @ params["wo"], (c_kv, k_pe)
+
+
+def mla_decode(params, cfg, x, cache, position):
+    """Absorbed MLA decode: attention in the compressed latent space.
+
+    cache: {ckv [B,T,r], kpe [B,T,rope], ptr}. Inserts the new token's
+    latents, then attends over valid slots; per head the nope logits are
+    (q_nope W_kb^T) . c_kv — O(r) per position, never materializing K/V.
+    Returns ([B,1,D], new cache).
+    """
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.num_heads
+    pos = jnp.full((b, 1), position) if jnp.ndim(position) == 0 else position
+    q_nope, q_pe = _mla_q(params, cfg, x, pos)      # [B,1,H,*]
+    new_ckv, new_kpe = _mla_ckv(params, cfg, x, pos)
+
+    t = cache["ckv"].shape[1]
+    ckv = ring_insert(cache["ckv"], new_ckv[:, 0], cache["ptr"])
+    kpe = ring_insert(cache["kpe"], new_kpe[:, 0], cache["ptr"])
+    num_valid = jnp.minimum(cache["ptr"] + 1, t)
+
+    wk_b = params["wk_b"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    # absorb: q' = q_nope @ wk_b^T  -> [B,H,r]
+    q_lat = jnp.einsum("bxhd,rhd->bhr", q_nope.astype(jnp.float32),
+                       wk_b.astype(jnp.float32))
+    scale = float(1.0 / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim))
+    logits = (jnp.einsum("bhr,btr->bht", q_lat,
+                         ckv.astype(jnp.float32))
+              + jnp.einsum("bxhd,btd->bht", q_pe.astype(jnp.float32),
+                           kpe.astype(jnp.float32))) * scale
+    valid = jnp.arange(t) < num_valid
+    logits = jnp.where(valid[None, None], logits, _NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bht,btr->bhr", p, ckv.astype(jnp.float32))
+    wv_b = params["wv_b"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bhr,rhd->bhd", ctx, wv_b.astype(jnp.float32))
+    out = out.reshape(b, 1, h * m.v_head_dim).astype(x.dtype)
+    new_cache = {"ckv": ckv, "kpe": kpe, "ptr": cache["ptr"] + 1}
+    return out @ params["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+def cross_init(key, cfg, dtype):
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _he(ks[0], (d, h * hd), dtype),
+        "wk": _he(ks[1], (d, h * hd), dtype),
+        "wv": _he(ks[2], (d, h * hd), dtype),
+        "wo": _he(ks[3], (h * hd, d), dtype, fan_in=h * hd),
+    }
+
+
+def cross_attention(params, cfg, x, enc_k, enc_v):
+    """x: [B,S,D]; enc_k/enc_v: [B,T,H,hd] (precomputed from encoder)."""
+    b, s, _ = x.shape
+    h, hd = cfg.num_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(b, s, h, 1, hd)
+    out = chunked_attention(q, enc_k, enc_v, causal=False)
+    out = out.reshape(b, s, h * hd)
+    return out @ params["wo"]
+
+
+def cross_kv(params, cfg, enc_out):
+    b, t, _ = enc_out.shape
+    h, hd = cfg.num_heads, cfg.head_dim
+    k = (enc_out @ params["wk"]).reshape(b, t, h, hd)
+    v = (enc_out @ params["wv"]).reshape(b, t, h, hd)
+    return k, v
+
+
+def bidir_attention(params, cfg, x, positions):
+    """Encoder self-attention (no causal mask)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    out = chunked_attention(q, k, v, causal=False)
+    out = out.reshape(b, s, cfg.num_heads * cfg.head_dim)
+    return out @ params["wo"]

@@ -1,0 +1,189 @@
+"""Encoder-decoder transformer (Whisper-style) for the audio arch.
+
+The conv+mel frontend is a STUB per the assignment: `input_specs` supplies
+precomputed frame embeddings [B, T_enc, D] (T_enc = 1500 for Whisper). The
+encoder is a bidirectional transformer over frames; the decoder is a causal
+transformer with cross-attention. Positional encoding uses RoPE in place of
+Whisper's learned absolute embeddings (uniform stack; noted in DESIGN.md).
+
+Decode cache = per-layer {self k/v ring, cross k/v (static)}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models.layers import (
+    embed, embedding_init, make_norm, mlp_apply, mlp_init, _he,
+)
+from repro.models.attention import prefill_cache_entries
+
+
+def encdec_init(cfg, key, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    norm_init, _ = make_norm(cfg.norm_type)
+    k_enc, k_dec, k_emb, k_head = jax.random.split(key, 4)
+
+    def enc_block(k):
+        ks = jax.random.split(k, 2)
+        return {"ln1": norm_init(cfg.d_model, dtype),
+                "attn": A.gqa_init(ks[0], cfg, dtype),
+                "ln2": norm_init(cfg.d_model, dtype),
+                "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                                cfg.mlp_type, dtype)}
+
+    def dec_block(k):
+        ks = jax.random.split(k, 3)
+        return {"ln1": norm_init(cfg.d_model, dtype),
+                "self": A.gqa_init(ks[0], cfg, dtype),
+                "ln_x": norm_init(cfg.d_model, dtype),
+                "cross": A.cross_init(ks[1], cfg, dtype),
+                "ln2": norm_init(cfg.d_model, dtype),
+                "mlp": mlp_init(ks[2], cfg.d_model, cfg.d_ff,
+                                cfg.mlp_type, dtype)}
+
+    enc_keys = jax.random.split(k_enc, cfg.encoder_layers)
+    dec_keys = jax.random.split(k_dec, cfg.num_layers)
+    return {
+        "encoder": jax.vmap(enc_block)(enc_keys),
+        "decoder": jax.vmap(dec_block)(dec_keys),
+        "enc_norm": norm_init(cfg.d_model, dtype),
+        "final_norm": norm_init(cfg.d_model, dtype),
+        "embed": embedding_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "head": _he(k_head, (cfg.d_model, cfg.vocab_size), dtype),
+    }
+
+
+def encode(cfg, params, frames):
+    """frames: [B, T_enc, D] stub embeddings -> [B, T_enc, D]."""
+    _, norm = make_norm(cfg.norm_type)
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+
+    def body(xx, p_layer):
+        h = norm(p_layer["ln1"], xx)
+        xx = xx + A.bidir_attention(p_layer["attn"], cfg, h, positions)
+        h2 = norm(p_layer["ln2"], xx)
+        xx = xx + mlp_apply(p_layer["mlp"], h2, cfg.mlp_type)
+        return xx, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return norm(params["enc_norm"], x)
+
+
+def _decoder_stack(cfg, params, x, positions, mode, caches, enc_out):
+    _, norm = make_norm(cfg.norm_type)
+
+    def body(xx, inp):
+        p_layer, c_layer = inp
+        h = norm(p_layer["ln1"], xx)
+        if mode in ("train", "prefill"):
+            out, (k, v) = A.gqa_prefill(p_layer["self"], cfg, h, positions)
+            if mode == "prefill":
+                t = c_layer["k"].shape[1]
+                s_len = xx.shape[1]
+                new_c = {"k": prefill_cache_entries(
+                             k, t, s_len).astype(c_layer["k"].dtype),
+                         "v": prefill_cache_entries(
+                             v, t, s_len).astype(c_layer["v"].dtype),
+                         "ptr": jnp.full((), s_len, jnp.int32),
+                         "ek": c_layer["ek"], "ev": c_layer["ev"]}
+            else:
+                new_c = ()
+        else:
+            self_cache = {"k": c_layer["k"], "v": c_layer["v"],
+                          "ptr": c_layer["ptr"]}
+            out, new_self = A.gqa_decode(p_layer["self"], cfg, h,
+                                         self_cache, positions)
+            new_c = dict(new_self, ek=c_layer["ek"], ev=c_layer["ev"])
+        xx = xx + out
+
+        hx = norm(p_layer["ln_x"], xx)
+        if mode == "train":
+            ek, ev = A.cross_kv(p_layer["cross"], cfg, enc_out)
+        else:
+            ek, ev = ((c_layer["ek"], c_layer["ev"]) if mode == "decode"
+                      else A.cross_kv(p_layer["cross"], cfg, enc_out))
+            if mode == "prefill":
+                new_c = dict(new_c, ek=ek.astype(new_c["ek"].dtype),
+                             ev=ev.astype(new_c["ev"].dtype))
+        xx = xx + A.cross_attention(p_layer["cross"], cfg, hx,
+                                    ek.astype(xx.dtype), ev.astype(xx.dtype))
+
+        h2 = norm(p_layer["ln2"], xx)
+        xx = xx + mlp_apply(p_layer["mlp"], h2, cfg.mlp_type)
+        return xx, new_c
+
+    xs = (params["decoder"], caches)
+    x, new_caches = jax.lax.scan(body, x, xs)
+    x = norm(params["final_norm"], x)
+    return x, new_caches
+
+
+def init_cache(cfg, batch, seq_len, dtype=jnp.bfloat16):
+    kv, hd, h = cfg.num_kv_heads, cfg.head_dim, cfg.num_heads
+    t_enc = cfg.encoder_seq
+    one = {"k": jnp.zeros((batch, seq_len, kv, hd), dtype),
+           "v": jnp.zeros((batch, seq_len, kv, hd), dtype),
+           "ptr": jnp.zeros((), jnp.int32),
+           "ek": jnp.zeros((batch, t_enc, h, hd), dtype),
+           "ev": jnp.zeros((batch, t_enc, h, hd), dtype)}
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape), one)
+
+
+def _cast(cfg, params):
+    cd = jnp.dtype(cfg.compute_dtype)
+    return jax.tree.map(
+        lambda a: a.astype(cd) if jnp.issubdtype(a.dtype, jnp.floating)
+        else a, params)
+
+
+def train_loss(cfg, params, batch, window=0):
+    """batch: {frames [B,T,D], tokens [B,S], targets [B,S]}."""
+    del window
+    params = _cast(cfg, params)
+    enc_out = encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.compute_dtype))
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    dummy = init_cache(cfg, b, 1)
+    x, _ = _decoder_stack(cfg, params, x, positions, "train",
+                          dummy, enc_out)
+    logits = (x @ params["head"]).astype(jnp.float32)
+    targets = batch["targets"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(logz - gold)
+    return loss, {"nll": loss, "aux": jnp.zeros(())}
+
+
+def prefill(cfg, params, batch, window=0, cache_dtype=jnp.bfloat16,
+            cache_len=None):
+    del window
+    params = _cast(cfg, params)
+    enc_out = encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.compute_dtype))
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    caches = init_cache(cfg, b, max(cache_len or s, s), dtype=cache_dtype)
+    x, caches = _decoder_stack(cfg, params, x, positions, "prefill",
+                               caches, enc_out)
+    logits = (x[:, -1:] @ params["head"]).astype(jnp.float32)
+    return logits, caches
+
+
+def decode_step(cfg, params, token, caches, position, window=0):
+    del window
+    params = _cast(cfg, params)
+    x = embed(params["embed"], token).astype(jnp.dtype(cfg.compute_dtype))
+    b = x.shape[0]
+    positions = jnp.full((b, 1), position, jnp.int32)
+    x, caches = _decoder_stack(cfg, params, x, positions, "decode",
+                               caches, None)
+    logits = (x @ params["head"]).astype(jnp.float32)
+    return logits, caches

@@ -1,0 +1,62 @@
+"""Best-effort GSPMD sharding hints for model internals.
+
+GSPMD occasionally partitions a contraction dimension inside scan bodies
+(the stacked loop buffers lose the propagated head sharding), turning every
+attention chunk into a partial-sum all-reduce. `shard_hint` pins the
+preferred layout when — and only when — a compatible mesh is active; it is
+a silent no-op otherwise (single-device tests, interpret mode, mismatched
+axis sizes), so model code stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec
+
+
+import os
+
+
+def _active_mesh():
+    if os.environ.get("REPRO_DISABLE_HINTS"):
+        return None
+    try:
+        from jax.interpreters import pxla
+        mesh = pxla.thread_resources.env.physical_mesh
+        if mesh.empty:
+            return None
+        return mesh
+    except Exception:
+        return None
+
+
+def shard_hint(x, *dim_axes):
+    """Constrain x's sharding: dim_axes[i] = mesh axis name, a tuple of
+    candidate names (first match wins), or None. Dims beyond len(dim_axes)
+    stay unspecified. No-op when no mesh is active or nothing matches."""
+    mesh = _active_mesh()
+    if mesh is None:
+        return x
+    shape = dict(mesh.shape)
+    spec = []
+    used = set()
+    for dim, cand in zip(x.shape, dim_axes):
+        if cand is None:
+            spec.append(None)
+            continue
+        cands = cand if isinstance(cand, tuple) else (cand,)
+        pick = None
+        for ax in cands:
+            if (ax in shape and ax not in used and shape[ax] > 1
+                    and dim % shape[ax] == 0 and dim >= shape[ax]):
+                pick = ax
+                break
+        spec.append(pick)
+        if pick:
+            used.add(pick)
+    spec += [None] * (x.ndim - len(spec))
+    if not any(spec):
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, PartitionSpec(*spec))
+    except Exception:
+        return x

@@ -1,0 +1,113 @@
+"""Model dispatch: build (init, train_loss, prefill, decode_step) per config,
+plus ShapeDtypeStruct input specs for the dry-run.
+
+Families:
+  dense/moe/ssm/hybrid -> decoder-only transformer stack
+  vlm                  -> transformer + patch-embedding prefix (stub frontend)
+  audio/encdec         -> whisper-style encoder-decoder (stub conv frontend)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec as ED
+from repro.models import transformer as TF
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable           # (key) -> params
+    train_loss: Callable     # (params, batch) -> (loss, metrics)
+    prefill: Callable        # (params, batch) -> (logits, caches)
+    decode_step: Callable    # (params, token, caches, position) -> (logits, caches)
+    init_cache: Callable     # (batch, seq_len, window) -> caches
+
+
+def build_model(cfg: ArchConfig, window: int = 0) -> Model:
+    """window: sliding-window override for long-context decode (0 = native)."""
+    if cfg.family in ("audio", "encdec"):
+        return Model(
+            cfg=cfg,
+            init=lambda key: ED.encdec_init(cfg, key),
+            train_loss=lambda p, b: ED.train_loss(cfg, p, b),
+            prefill=lambda p, b, **kw: ED.prefill(cfg, p, b, **kw),
+            decode_step=lambda p, t, c, pos: ED.decode_step(cfg, p, t, c, pos),
+            init_cache=lambda batch, seq, win=0: ED.init_cache(cfg, batch, seq),
+        )
+    return Model(
+        cfg=cfg,
+        init=lambda key: TF.transformer_init(cfg, key),
+        train_loss=lambda p, b, **kw: TF.train_loss(cfg, p, b, window=window, **kw),
+        prefill=lambda p, b, **kw: TF.prefill(cfg, p, b, window=window, **kw),
+        decode_step=lambda p, t, c, pos: TF.decode_step(cfg, p, t, c, pos,
+                                                        window=window),
+        init_cache=lambda batch, seq, win=window: TF.init_cache(
+            cfg, batch, seq, window=win),
+    )
+
+
+def init_params(cfg: ArchConfig, key):
+    return build_model(cfg).init(key)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, window: int = 0):
+    """Returns the batch pytree (as ShapeDtypeStructs) for the given shape.
+
+    train:   {tokens, targets[, patches | frames]}
+    prefill: {tokens[, patches | frames]}
+    decode:  {token [B,1], caches, position} — caches via cache_specs below.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32, f = jnp.int32, jnp.dtype(cfg.compute_dtype)
+
+    if cfg.family in ("audio", "encdec"):
+        frames = _sds((b, cfg.encoder_seq, cfg.d_model), f)
+        if shape.kind == "train":
+            return {"frames": frames, "tokens": _sds((b, s), i32),
+                    "targets": _sds((b, s), i32)}
+        if shape.kind == "prefill":
+            return {"frames": frames, "tokens": _sds((b, s), i32)}
+        return {"token": _sds((b, 1), i32)}
+
+    if cfg.family == "vlm":
+        p = cfg.num_patches
+        s_text = s - p
+        assert s_text > 0, "seq must exceed patch prefix"
+        patches = _sds((b, p, cfg.d_model), f)
+        if shape.kind == "train":
+            return {"tokens": _sds((b, s_text), i32),
+                    "targets": _sds((b, s_text), i32),
+                    "patches": patches}
+        if shape.kind == "prefill":
+            return {"tokens": _sds((b, s_text), i32), "patches": patches}
+        return {"token": _sds((b, 1), i32)}
+
+    if shape.kind == "train":
+        return {"tokens": _sds((b, s), i32), "targets": _sds((b, s), i32)}
+    if shape.kind == "prefill":
+        return {"tokens": _sds((b, s), i32)}
+    return {"token": _sds((b, 1), i32)}
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeConfig, window: int = 0,
+                dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for the decode caches (capacity = seq_len/window)."""
+    model = build_model(cfg, window=window)
+    caches = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len, window))
+    return caches

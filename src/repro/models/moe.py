@@ -1,0 +1,162 @@
+"""Mixture-of-Experts: top-k routing, GShard-style grouped dispatch.
+
+Dispatch follows the GShard/GSPMD einsum formulation (arXiv:2006.16668):
+tokens are grouped (group = sequence), positions within each (group,
+expert) bucket come from a per-group cumulative sum, and dispatch/combine
+are one-hot einsums
+
+    buf[g,e,c,d]  = sum_s dispatch[g,s,e,c] * x[g,s,d]
+    out[g,s,d]    = sum_{e,c} combine[g,s,e,c] * y[g,e,c,d]
+
+which GSPMD partitions cleanly: groups over the data axes, experts over
+"model" (the relayout between the two IS the canonical MoE all-to-all).
+A sort/scatter dispatch (kept below as moe_apply_scatter for comparison)
+defeats the partitioner — it manufactures capacity-sized partial-sum
+all-reduces (measured in EXPERIMENTS.md §Perf, dbrx iterations 1-3).
+
+Tokens above per-group capacity are dropped (standard GShard semantics).
+Expert weights are stacked on a leading E axis so expert parallelism is a
+pure sharding annotation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.hints import shard_hint
+from repro.models.layers import _he
+
+
+def moe_init(key, cfg, dtype):
+    m = cfg.moe
+    d = cfg.d_model
+    f = m.d_ff_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _he(ks[0], (d, m.num_experts), dtype),
+        "w_gate": _he(ks[1], (m.num_experts, d, f), dtype, fan_in=d),
+        "w_up": _he(ks[2], (m.num_experts, d, f), dtype, fan_in=d),
+        "w_down": _he(ks[3], (m.num_experts, f, d), dtype, fan_in=f),
+    }
+    if m.num_shared_experts:
+        fs = f * m.num_shared_experts
+        ks2 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": _he(ks2[0], (d, fs), dtype),
+            "w_up": _he(ks2[1], (d, fs), dtype),
+            "w_down": _he(ks2[2], (fs, d), dtype),
+        }
+    return p
+
+
+def moe_apply(params, cfg, x):
+    """x: [B, S, D] -> (out [B, S, D], aux_loss). Groups = sequences."""
+    m = cfg.moe
+    b, s, d = x.shape
+    k = m.top_k
+    e = m.num_experts
+
+    logits = (x @ params["router"]).astype(jnp.float32)        # [B,S,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_i = jax.lax.top_k(probs, k)                   # [B,S,k]
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch-style)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(gate_i, e, dtype=jnp.float32).sum(2), axis=(0, 1))
+    frac_probs = probs.mean(axis=(0, 1))
+    aux = m.router_aux_loss * e * jnp.sum(frac_tokens * frac_probs)
+
+    capacity = max(int(np.ceil(s * k / e * m.capacity_factor)), 4)
+
+    # position of each (token, slot) within its (group, expert) bucket:
+    # flatten slots in token-major order and cumsum the expert one-hots
+    oh_e = jax.nn.one_hot(gate_i.reshape(b, s * k), e,
+                          dtype=jnp.float32)                    # [B,sk,E]
+    pos = (jnp.cumsum(oh_e, axis=1) * oh_e).sum(-1) - 1.0       # [B,sk]
+    keep = (pos < capacity) & (pos >= 0)
+    oh_c = jax.nn.one_hot(pos.astype(jnp.int32), capacity,
+                          dtype=jnp.float32)                    # [B,sk,C]
+    oh_c = oh_c * keep[..., None]
+
+    gates_flat = gate_w.reshape(b, s * k)
+    # combine[g,s,e,c]: contract the k slots (token-major flatten)
+    combine = jnp.einsum("gre,grc->grec", oh_e,
+                         oh_c * gates_flat[..., None])
+    combine = combine.reshape(b, s, k, e, capacity).sum(axis=2)  # [B,S,E,C]
+    dispatch = (combine > 0).astype(x.dtype)
+
+    # canonical GShard einsums: groups over data axes, experts over model
+    buf = jnp.einsum("gsec,gsd->gecd", dispatch, x)              # [B,E,C,D]
+    buf = shard_hint(buf, ("replica", "data"), "model", None, None)
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, params["w_gate"]))
+    h = h * jnp.einsum("gecd,edf->gecf", buf, params["w_up"])
+    y = jnp.einsum("gecf,efd->gecd", h, params["w_down"])
+    y = shard_hint(y, ("replica", "data"), "model", None, None)
+
+    out = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), y)
+
+    if m.num_shared_experts:
+        sp = params["shared"]
+        xf = x.reshape(b * s, d)
+        hs = jax.nn.silu(xf @ sp["w_gate"]) * (xf @ sp["w_up"])
+        out = out + (hs @ sp["w_down"]).reshape(b, s, d)
+
+    return out, aux
+
+
+def moe_apply_scatter(params, cfg, x):
+    """Sort/scatter dispatch (MaxText-style). Kept for comparison: compute-
+    optimal per token but GSPMD-hostile — see EXPERIMENTS.md §Perf."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    k = m.top_k
+    e = m.num_experts
+    xf = x.reshape(t, d)
+
+    logits = (xf @ params["router"]).astype(jnp.float32)       # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_i = jax.lax.top_k(probs, k)                    # [T, k]
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(gate_i, e, dtype=jnp.float32).sum(1), axis=0)
+    frac_probs = probs.mean(axis=0)
+    aux = m.router_aux_loss * e * jnp.sum(frac_tokens * frac_probs)
+
+    capacity = max(int(np.ceil(t * k / e * m.capacity_factor)), 4)
+
+    e_flat = gate_i.reshape(-1)                                 # [T*k]
+    w_flat = gate_w.reshape(-1)
+    tok_idx = jnp.repeat(jnp.arange(t), k)
+
+    order = jnp.argsort(e_flat)
+    e_sorted = e_flat[order]
+    counts = jnp.zeros((e,), jnp.int32).at[e_flat].add(1)
+    seg_starts = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    pos_sorted = jnp.arange(t * k, dtype=jnp.int32) - seg_starts[e_sorted]
+    pos = jnp.zeros((t * k,), jnp.int32).at[order].set(pos_sorted)
+
+    buf = jnp.zeros((e, capacity, d), x.dtype)
+    buf = buf.at[e_flat, pos].add(xf[tok_idx], mode="drop")
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    y_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+
+    valid = (pos < capacity)
+    y_tok = y_buf[e_flat, jnp.minimum(pos, capacity - 1)]
+    y_tok = jnp.where(valid[:, None], y_tok, 0.0)
+    out = jnp.zeros((t, d), x.dtype).at[tok_idx].add(
+        y_tok * w_flat[:, None].astype(x.dtype))
+
+    if m.num_shared_experts:
+        sp = params["shared"]
+        hs = jax.nn.silu(xf @ sp["w_gate"]) * (xf @ sp["w_up"])
+        out = out + hs @ sp["w_down"]
+
+    return out.reshape(b, s, d), aux

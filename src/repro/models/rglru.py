@@ -1,0 +1,90 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block structure (the Griffin "recurrent block"):
+    x -> [branch A: W_x -> causal conv1d(width 4) -> RG-LRU]
+      -> [branch B: W_y -> GeLU]
+      -> A * B -> W_out
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a xhat_t + b_a)           (recurrence gate)
+    i_t = sigmoid(W_i xhat_t + b_i)           (input gate)
+    log a_t = -c * softplus(Lambda) * r_t     (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * xhat_t)
+
+Implemented as lax.scan over time; repro.kernels.rglru_scan is the chunked
+Pallas TPU version.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _he
+
+_C = 8.0
+
+
+def rglru_init(key, cfg, dtype):
+    d = cfg.d_model
+    w = cfg.rnn_width or d
+    cw = cfg.conv_width
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": _he(ks[0], (d, w), dtype),
+        "w_y": _he(ks[1], (d, w), dtype),
+        "conv_kernel": (jax.random.normal(ks[2], (cw, w)) * 0.1).astype(dtype),
+        "conv_bias": jnp.zeros((w,), dtype),
+        "w_a": _he(ks[3], (w, w), dtype),
+        "b_a": jnp.zeros((w,), dtype),
+        "w_i": _he(ks[4], (w, w), dtype),
+        "b_i": jnp.zeros((w,), dtype),
+        "lamb": jnp.full((w,), 1.0, dtype),     # softplus(1) ~ 1.31
+        "w_out": _he(ks[5], (w, d), dtype),
+    }
+
+
+def init_state(cfg, batch, dtype=jnp.float32):
+    w = cfg.rnn_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def _causal_conv(params, x, conv_state):
+    """x: [B,S,W]; conv_state: [B,cw-1,W] (previous inputs)."""
+    cw = params["conv_kernel"].shape[0]
+    full = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    out = sum(full[:, i:i + x.shape[1], :] * params["conv_kernel"][cw - 1 - i]
+              for i in range(cw))
+    new_state = full[:, -(cw - 1):, :]
+    return out + params["conv_bias"], new_state
+
+
+def rglru_block(params, cfg, x, state):
+    """x: [B,S,D] -> (out [B,S,D], new state)."""
+    xa = x @ params["w_x"]
+    xa, conv_state = _causal_conv(params, xa, state["conv"])
+
+    r = jax.nn.sigmoid(xa @ params["w_a"] + params["b_a"])
+    i = jax.nn.sigmoid(xa @ params["w_i"] + params["b_i"])
+    log_a = (-_C * jax.nn.softplus(params["lamb"].astype(jnp.float32))
+             * r.astype(jnp.float32))                        # [B,S,W] < 0
+    a = jnp.exp(log_a)
+    gated = (i * xa).astype(jnp.float32)
+    scale = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+
+    def step(h, inp):
+        a_t, u_t = inp
+        h_new = a_t * h + u_t
+        return h_new, h_new
+
+    u = scale * gated
+    h_final, hs = jax.lax.scan(
+        step, state["h"],
+        (jnp.moveaxis(a, 1, 0), jnp.moveaxis(u, 1, 0)))
+    h_seq = jnp.moveaxis(hs, 0, 1).astype(x.dtype)           # [B,S,W]
+
+    yb = jax.nn.gelu(x @ params["w_y"])
+    out = (h_seq * yb) @ params["w_out"]
+    return out, {"conv": conv_state, "h": h_final}

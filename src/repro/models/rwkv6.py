@@ -1,0 +1,211 @@
+"""RWKV6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+Faithful to arXiv:2404.05892 at block level:
+  * token-shift interpolation (static mix ratios mu_*),
+  * data-dependent per-channel decay w_t = exp(-exp(w0 + LoRA(x_t))),
+  * per-head WKV state recurrence with bonus term u:
+        out_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+        S_t   = diag(w_t) S_{t-1} + k_t^T v_t
+  * grouped (per-head) normalization, silu(g) output gate,
+  * channel-mix: sigma(r') * (relu(k')^2 W_v).
+
+Simplification recorded in DESIGN.md: the *token-shift* data-dependence
+(ddlerp LoRAs) is reduced to static mix ratios; the decay LoRA — the
+mechanism the paper is named for — is kept.
+
+The recurrence is a lax.scan over time (the Pallas kernel in
+repro.kernels.rwkv6_scan implements the chunked TPU version of the same
+math).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _he
+
+
+DECAY_LORA = 64
+
+
+def rwkv_init(key, cfg, dtype):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    ks = jax.random.split(key, 12)
+    return {
+        "mu": {n: jnp.full((d,), 0.5, dtype) for n in
+               ("r", "k", "v", "g", "w")},
+        "wr": _he(ks[0], (d, d), dtype),
+        "wk": _he(ks[1], (d, d), dtype),
+        "wv": _he(ks[2], (d, d), dtype),
+        "wg": _he(ks[3], (d, d), dtype),
+        "w0": jnp.full((d,), -2.0, dtype),     # base decay ~exp(-exp(-2))
+        "w_lora_a": _he(ks[4], (d, DECAY_LORA), dtype),
+        "w_lora_b": (jax.random.normal(ks[5], (DECAY_LORA, d)) * 0.01
+                     ).astype(dtype),
+        "u": (jax.random.normal(ks[6], (h, hd)) * 0.1).astype(dtype),
+        "ln_out_scale": jnp.ones((d,), dtype),
+        "wo": _he(ks[7], (d, d), dtype),
+        # channel mix
+        "cm_mu": {n: jnp.full((d,), 0.5, dtype) for n in ("r", "k")},
+        "cm_wr": _he(ks[8], (d, d), dtype),
+        "cm_wk": _he(ks[9], (d, cfg.d_ff), dtype),
+        "cm_wv": _he(ks[10], (cfg.d_ff, d), dtype),
+    }
+
+
+def init_state(cfg, batch, dtype=jnp.float32):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    return {
+        "shift": jnp.zeros((batch, d), dtype),
+        "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "cm_shift": jnp.zeros((batch, d), dtype),
+    }
+
+
+def _token_shift(x, prev, mu):
+    """lerp between shifted and current: x + (shifted - x) * mu."""
+    shifted = jnp.concatenate(
+        [prev.astype(x.dtype)[:, None, :], x[:, :-1, :]], axis=1)
+    return {n: x + (shifted - x) * mu[n] for n in mu}
+
+
+def time_mix(params, cfg, x, state):
+    """x: [B,S,D], state: init_state dict -> (out [B,S,D], new state)."""
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+
+    xs = _token_shift(x, state["shift"], params["mu"])
+    r = (xs["r"] @ params["wr"]).reshape(b, s, h, hd)
+    k = (xs["k"] @ params["wk"]).reshape(b, s, h, hd)
+    v = (xs["v"] @ params["wv"]).reshape(b, s, h, hd)
+    g = jax.nn.silu(xs["g"] @ params["wg"])
+
+    # data-dependent decay (the Finch mechanism)
+    w = params["w0"] + jnp.tanh(
+        xs["w"] @ params["w_lora_a"]) @ params["w_lora_b"]
+    w = jnp.exp(-jnp.exp(w.astype(jnp.float32)))               # in (0,1)
+    w = w.reshape(b, s, h, hd)
+
+    u = params["u"].astype(jnp.float32)
+
+    import os
+    chunk = 64
+    if s % chunk == 0 and s > chunk \
+            and not os.environ.get("REPRO_RWKV_SEQUENTIAL"):
+        # chunked closed form (see wkv_chunked) — state crosses chunks
+        rt = r.transpose(0, 2, 1, 3)
+        kt = k.transpose(0, 2, 1, 3)
+        vt = v.transpose(0, 2, 1, 3)
+        wt = w.transpose(0, 2, 1, 3)
+        out_bhsd, s_final = wkv_chunked(rt, kt, vt, wt, params["u"],
+                                        state["wkv"], chunk=chunk)
+        out = out_bhsd.transpose(0, 2, 1, 3).reshape(b, s, d)
+        out = out.astype(jnp.float32)
+    else:
+        def step(s_state, inp):
+            rt, kt, vt, wt = inp                              # [B,H,hd]
+            kv = kt[..., :, None] * vt[..., None, :]          # [B,H,hd,hd]
+            out = jnp.einsum("bhk,bhkv->bhv", rt,
+                             s_state + u[None, :, :, None] * kv)
+            s_new = wt[..., :, None] * s_state + kv
+            return s_new, out
+
+        xs_t = (jnp.moveaxis(r, 1, 0).astype(jnp.float32),
+                jnp.moveaxis(k, 1, 0).astype(jnp.float32),
+                jnp.moveaxis(v, 1, 0).astype(jnp.float32),
+                jnp.moveaxis(w, 1, 0))
+        s_final, outs = jax.lax.scan(step, state["wkv"], xs_t)
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, s, d)       # [B,S,D]
+
+    # per-head group norm
+    out = out.reshape(b, s, h, hd)
+    mu_o = out.mean(-1, keepdims=True)
+    var_o = out.var(-1, keepdims=True)
+    out = (out - mu_o) * jax.lax.rsqrt(var_o + 1e-5)
+    out = out.reshape(b, s, d) * params["ln_out_scale"].astype(jnp.float32)
+
+    out = (out.astype(x.dtype) * g) @ params["wo"]
+    new_state = dict(state, shift=x[:, -1, :], wkv=s_final)
+    return out, new_state
+
+
+def channel_mix(params, cfg, x, state):
+    xs = _token_shift(x, state["cm_shift"], params["cm_mu"])
+    r = jax.nn.sigmoid(xs["r"] @ params["cm_wr"])
+    k = jnp.square(jax.nn.relu(xs["k"] @ params["cm_wk"]))
+    out = r * (k @ params["cm_wv"])
+    return out, dict(state, cm_shift=x[:, -1, :])
+
+
+# ---------------------------------------------------------------------------
+# chunked WKV (TPU-native): state crosses CHUNKS, not timesteps
+# ---------------------------------------------------------------------------
+
+
+def wkv_chunked(r, k, v, w, u, state, chunk=64):
+    """Chunked closed form of the WKV recurrence (all matmul/einsum work).
+
+    r,k,v: [B,H,S,hd]; w: decays in (0,1) [B,H,S,hd]; u: [H,hd];
+    state: [B,H,hd,hd]. Returns (out [B,H,S,hd], final state).
+
+    Per chunk (length c), with L_t = cumsum(log w) and Lprev_t = L_{t-1}:
+      out_t = (r_t * exp(Lprev_t)) @ S_in                     (cross-chunk)
+            + sum_{s<t} [sum_d r_td k_sd exp(Lprev_td - L_sd)] v_s  (intra)
+            + (r_t . (u * k_t)) v_t                           (bonus diag)
+      S_out = diag(exp(L_c)) S_in + sum_s (k_s * exp(L_c - L_s)) (x) v_s
+
+    All decay factors are ratios exp(L_a - L_b) with a >= b, hence <= 1 —
+    numerically stable (no 1/P factorization). The sequential lax.scan
+    version streams the [hd, hd] state through HBM every TIMESTEP; this
+    form does it once per CHUNK — the memory-roofline win measured in
+    EXPERIMENTS.md §Perf (rwkv6), and the same math the Pallas
+    rwkv6_scan kernel implements on-chip.
+    """
+    b, h, s, hd = r.shape
+    c = min(chunk, s)
+    assert s % c == 0, (s, c)
+    nc = s // c
+
+    f32 = jnp.float32
+    rc = r.astype(f32).reshape(b, h, nc, c, hd)
+    kc = k.astype(f32).reshape(b, h, nc, c, hd)
+    vc = v.astype(f32).reshape(b, h, nc, c, hd)
+    logw = jnp.log(jnp.maximum(w.astype(f32), 1e-38)
+                   ).reshape(b, h, nc, c, hd)
+    uu = u.astype(f32)
+
+    mask_strict = jnp.tril(jnp.ones((c, c), bool), k=-1)
+
+    def one_chunk(S, inp):
+        rr, kk, vv, lw = inp                      # [B,H,c,hd]
+        L = jnp.cumsum(lw, axis=2)                # inclusive
+        Lprev = L - lw                            # exclusive (L_{t-1})
+        Lend = L[:, :, -1:, :]                    # [B,H,1,hd]
+
+        r_dec = rr * jnp.exp(Lprev)
+        out = jnp.einsum("bhtd,bhdv->bhtv", r_dec, S)
+
+        # intra-chunk: decay ratios <= 1 for s < t
+        D = jnp.exp(Lprev[:, :, :, None, :] - L[:, :, None, :, :])
+        B = jnp.einsum("bhtd,bhsd,bhtsd->bhts", rr, kk, D)
+        B = jnp.where(mask_strict[None, None], B, 0.0)
+        out = out + jnp.einsum("bhts,bhsv->bhtv", B, vv)
+
+        diag = jnp.einsum("bhtd,bhtd->bht", rr, uu[None, :, None, :] * kk)
+        out = out + diag[..., None] * vv
+
+        k_dec = kk * jnp.exp(Lend - L)
+        S_new = (jnp.exp(Lend[:, :, 0, :])[..., None] * S
+                 + jnp.einsum("bhsd,bhsv->bhdv", k_dec, vv))
+        return S_new, out
+
+    xs = (jnp.moveaxis(rc, 2, 0), jnp.moveaxis(kc, 2, 0),
+          jnp.moveaxis(vc, 2, 0), jnp.moveaxis(logw, 2, 0))
+    S_final, outs = jax.lax.scan(one_chunk, state, xs)
+    out = jnp.moveaxis(outs, 0, 2).reshape(b, h, s, hd)
+    return out.astype(r.dtype), S_final

@@ -1,0 +1,354 @@
+"""Decoder-only transformer family: dense GQA / MoE / MLA / RWKV6 / RG-LRU.
+
+The stack is a *program* of segments: consecutive layers of the same kind
+are stacked on a leading axis and executed with jax.lax.scan (compact HLO —
+one layer body per kind regardless of depth), which keeps multi-hundred-
+layer configs compilable. Hybrids (recurrentgemma) interleave kinds and get
+one scan per homogeneous run.
+
+Cache semantics are uniform across kinds:
+  * attention (full or sliding): ring buffer {k, v, ptr} of capacity T
+    (T = seq_len, or window for sliding) — softmax is order-invariant so
+    ring order needs no re-sorting; decode overwrites slot ptr.
+  * MLA: ring {ckv, kpe, ptr} in the compressed latent space.
+  * rwkv / rglru: O(1) recurrent state.
+
+Modes: 'train' (no cache), 'prefill' (build cache), 'decode' (one token).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as A
+from repro.models.attention import prefill_cache_entries, ring_insert
+import os
+
+from repro.models import moe as MOE
+from repro.models import rglru as RG
+from repro.models import rwkv6 as RW
+from repro.models.layers import (
+    embed, embedding_init, make_norm, mlp_apply, mlp_init, unembed, _he,
+)
+
+
+# ---------------------------------------------------------------------------
+# block init / apply
+# ---------------------------------------------------------------------------
+
+
+def block_init(key, cfg, kind, dtype):
+    norm_init, _ = make_norm(cfg.norm_type)
+    ks = jax.random.split(key, 4)
+    if kind in ("attn", "moe"):
+        attn = (A.mla_init(ks[0], cfg, dtype) if cfg.mla is not None
+                else A.gqa_init(ks[0], cfg, dtype))
+        p = {"ln1": norm_init(cfg.d_model, dtype), "attn": attn,
+             "ln2": norm_init(cfg.d_model, dtype)}
+        if kind == "moe":
+            p["moe"] = MOE.moe_init(ks[1], cfg, dtype)
+        else:
+            p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                                cfg.mlp_type, dtype)
+        return p
+    if kind == "rwkv":
+        return {"ln1": norm_init(cfg.d_model, dtype),
+                "mix": RW.rwkv_init(ks[0], cfg, dtype),
+                "ln2": norm_init(cfg.d_model, dtype)}
+    if kind == "rglru":
+        return {"ln1": norm_init(cfg.d_model, dtype),
+                "rnn": RG.rglru_init(ks[0], cfg, dtype),
+                "ln2": norm_init(cfg.d_model, dtype),
+                "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                                cfg.mlp_type, dtype)}
+    raise ValueError(kind)
+
+
+def init_cache_layer(cfg, kind, batch, capacity, dtype):
+    """Zero cache for one layer of the given kind."""
+    if kind in ("attn", "moe"):
+        if cfg.mla is not None:
+            m = cfg.mla
+            return {"ckv": jnp.zeros((batch, capacity, m.kv_lora_rank), dtype),
+                    "kpe": jnp.zeros((batch, capacity, m.qk_rope_head_dim),
+                                     dtype),
+                    "ptr": jnp.zeros((), jnp.int32)}
+        kv, hd = cfg.num_kv_heads, cfg.head_dim
+        return {"k": jnp.zeros((batch, capacity, kv, hd), dtype),
+                "v": jnp.zeros((batch, capacity, kv, hd), dtype),
+                "ptr": jnp.zeros((), jnp.int32)}
+    if kind == "rwkv":
+        return RW.init_state(cfg, batch)
+    if kind == "rglru":
+        return RG.init_state(cfg, batch)
+    raise ValueError(kind)
+
+
+_ring_insert = ring_insert   # back-compat alias
+
+
+def block_apply(cfg, kind, params, x, *, positions, mode, cache=None,
+                window=0):
+    """Returns (x_out, new_cache, aux). aux = scalar (moe load-balance)."""
+    _, norm = make_norm(cfg.norm_type)
+    aux = jnp.zeros((), jnp.float32)
+
+    if kind in ("attn", "moe"):
+        h = norm(params["ln1"], x)
+        if mode in ("train", "prefill"):
+            if cfg.mla is not None:
+                attn_out, (ckv, kpe) = A.mla_prefill(params["attn"], cfg, h,
+                                                     positions)
+            else:
+                attn_out, (k, v) = A.gqa_prefill(params["attn"], cfg, h,
+                                                 positions, window=window)
+            x = x + attn_out
+            new_cache = ()
+            if mode == "prefill":
+                s_len = x.shape[1]
+                ptr = jnp.full((), s_len, jnp.int32)
+                if cfg.mla is not None:
+                    t = cache["ckv"].shape[1]
+                    new_cache = {
+                        "ckv": prefill_cache_entries(
+                            ckv, t, s_len).astype(cache["ckv"].dtype),
+                        "kpe": prefill_cache_entries(
+                            kpe, t, s_len).astype(cache["kpe"].dtype),
+                        "ptr": ptr}
+                else:
+                    t = cache["k"].shape[1]
+                    new_cache = {
+                        "k": prefill_cache_entries(
+                            k, t, s_len).astype(cache["k"].dtype),
+                        "v": prefill_cache_entries(
+                            v, t, s_len).astype(cache["v"].dtype),
+                        "ptr": ptr}
+        else:  # decode: insert-then-attend (token attends to itself)
+            pos = positions                         # [B,1] absolute position
+            if cfg.mla is not None:
+                attn_out, new_cache = A.mla_decode(
+                    params["attn"], cfg, h, cache, pos)
+            else:
+                attn_out, new_cache = A.gqa_decode(
+                    params["attn"], cfg, h, cache, pos, window=window)
+            x = x + attn_out
+
+        h2 = norm(params["ln2"], x)
+        if kind == "moe":
+            moe_fn = (MOE.moe_apply_scatter
+                      if os.environ.get("REPRO_MOE_SCATTER")
+                      else MOE.moe_apply)
+            ff, aux = moe_fn(params["moe"], cfg, h2)
+        else:
+            ff = mlp_apply(params["mlp"], h2, cfg.mlp_type)
+        return x + ff, new_cache, aux
+
+    if kind == "rwkv":
+        state = cache if cache is not None else RW.init_state(cfg, x.shape[0])
+        h = norm(params["ln1"], x)
+        tm_out, state = RW.time_mix(params["mix"], cfg, h, state)
+        x = x + tm_out
+        h2 = norm(params["ln2"], x)
+        cm_out, state = RW.channel_mix(params["mix"], cfg, h2, state)
+        x = x + cm_out
+        new_cache = state if mode != "train" else ()
+        return x, new_cache, aux
+
+    if kind == "rglru":
+        state = cache if cache is not None else RG.init_state(cfg, x.shape[0])
+        h = norm(params["ln1"], x)
+        rnn_out, state = RG.rglru_block(params["rnn"], cfg, h, state)
+        x = x + rnn_out
+        h2 = norm(params["ln2"], x)
+        x = x + mlp_apply(params["mlp"], h2, cfg.mlp_type)
+        new_cache = state if mode != "train" else ()
+        return x, new_cache, aux
+
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# segments (runs of identical layer kinds -> lax.scan)
+# ---------------------------------------------------------------------------
+
+
+def build_segments(layer_types):
+    """[(kind, count), ...] for consecutive runs."""
+    segs = []
+    for t in layer_types:
+        if segs and segs[-1][0] == t:
+            segs[-1][1] += 1
+        else:
+            segs.append([t, 1])
+    return [(k, c) for k, c in segs]
+
+
+def transformer_init(cfg, key, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    segs = build_segments(cfg.layer_types)
+    keys = jax.random.split(key, len(segs) + 2)
+    norm_init, _ = make_norm(cfg.norm_type)
+    seg_params = []
+    for (kind, count), k in zip(segs, keys[:-2]):
+        lk = jax.random.split(k, count)
+        seg_params.append(jax.vmap(
+            lambda kk: block_init(kk, cfg, kind, dtype))(lk))
+    params = {
+        "embed": embedding_init(keys[-2], cfg.vocab_size, cfg.d_model, dtype),
+        "segments": seg_params,
+        "final_norm": norm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = _he(keys[-1], (cfg.d_model, cfg.vocab_size), dtype)
+    return params
+
+
+def init_cache(cfg, batch, seq_len, window=0, dtype=jnp.bfloat16):
+    """Stacked per-segment caches for decode. window>0 caps attn capacity."""
+    segs = build_segments(cfg.layer_types)
+    caches = []
+    for kind, count in segs:
+        if kind in ("attn", "moe"):
+            native_win = cfg.attn_window or window
+            cap = min(seq_len, native_win) if native_win else seq_len
+        else:
+            cap = 0
+        one = init_cache_layer(cfg, kind, batch, max(cap, 1), dtype)
+        caches.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (count,) + a.shape), one))
+    return caches
+
+
+def _segment_apply(cfg, kind, seg_params, x, *, positions, mode,
+                   seg_cache=None, window=0, remat=False):
+    """Scan one homogeneous run of `count` layers."""
+
+    def body(carry, inp):
+        xx = carry
+        if seg_cache is None:
+            p_layer = inp
+            c_layer = None
+        else:
+            p_layer, c_layer = inp
+
+        def blk(p, h):
+            return block_apply(cfg, kind, p, h, positions=positions,
+                               mode=mode, cache=c_layer, window=window)
+
+        if remat and mode == "train":
+            blk = jax.checkpoint(blk)   # activation checkpointing per block
+        xx, new_c, aux = blk(p_layer, xx)
+        return xx, (new_c, aux)
+
+    xs = seg_params if seg_cache is None else (seg_params, seg_cache)
+    x, (new_caches, auxs) = jax.lax.scan(body, x, xs)
+    return x, new_caches, jnp.sum(auxs)
+
+
+def forward(cfg, params, x, *, positions, mode, caches=None, window=0,
+            remat=False):
+    """Run the full stack on embeddings x. Returns (x, new_caches, aux)."""
+    segs = build_segments(cfg.layer_types)
+    new_caches = []
+    aux_total = jnp.zeros((), jnp.float32)
+    for si, (kind, count) in enumerate(segs):
+        seg_cache = None if caches is None else caches[si]
+        x, nc, aux = _segment_apply(cfg, kind, params["segments"][si], x,
+                                    positions=positions, mode=mode,
+                                    seg_cache=seg_cache, window=window,
+                                    remat=remat)
+        new_caches.append(nc)
+        aux_total = aux_total + aux
+    _, norm = make_norm(cfg.norm_type)
+    x = norm(params["final_norm"], x)
+    return x, new_caches, aux_total
+
+
+def logits_fn(cfg, params, x):
+    if cfg.tie_embeddings:
+        return unembed(params["embed"], x)
+    return x @ params["head"]
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+
+def _cast(cfg, params):
+    cd = jnp.dtype(cfg.compute_dtype)
+    return jax.tree.map(
+        lambda a: a.astype(cd) if jnp.issubdtype(a.dtype, jnp.floating)
+        else a, params)
+
+
+def train_loss(cfg, params, batch, window=0, remat=True):
+    """batch: {tokens [B,S], targets [B,S], loss_mask [B,S](opt),
+    patches [B,P,D](opt, VLM prefix)}. Returns (loss, metrics)."""
+    params = _cast(cfg, params)
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.compute_dtype))
+    n_prefix = 0
+    if "patches" in batch and batch["patches"] is not None:
+        patches = batch["patches"].astype(x.dtype)
+        n_prefix = patches.shape[1]
+        x = jnp.concatenate([patches, x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x, _, aux = forward(cfg, params, x, positions=positions, mode="train",
+                        window=window, remat=remat)
+    x = x[:, n_prefix:]
+    logits = logits_fn(cfg, params, x).astype(jnp.float32)
+    targets = batch["targets"]
+    # shard-friendly CE: reductions over the (vocab-sharded) last axis
+    # partition cleanly; take_along_axis would force logits replication
+    m = jax.lax.stop_gradient(logits.max(axis=-1))
+    logz = m + jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1))
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    nll = logz - gold
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss + aux, {"nll": loss, "aux": aux}
+
+
+def prefill(cfg, params, batch, window=0, cache_dtype=jnp.bfloat16,
+            cache_len=None):
+    """Build caches from a full prompt. Returns (logits_last, caches).
+
+    cache_len: total cache capacity (>= prompt length) to leave headroom
+    for subsequent decode steps; defaults to the prompt length."""
+    params = _cast(cfg, params)
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.compute_dtype))
+    if "patches" in batch and batch["patches"] is not None:
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    caches = init_cache(cfg, b, max(cache_len or s, s), window=window,
+                        dtype=cache_dtype)
+    x, caches, _ = forward(cfg, params, x, positions=positions,
+                           mode="prefill", caches=caches, window=window)
+    logits = logits_fn(cfg, params, x[:, -1:]).astype(jnp.float32)
+    return logits, caches
+
+
+def decode_step(cfg, params, token, caches, position, window=0):
+    """token: [B,1] int32; position: scalar absolute position.
+
+    Returns (logits [B,1,V], new caches)."""
+    params = _cast(cfg, params)
+    x = embed(params["embed"], token).astype(jnp.dtype(cfg.compute_dtype))
+    b = x.shape[0]
+    positions = jnp.full((b, 1), position, jnp.int32)
+    x, caches, _ = forward(cfg, params, x, positions=positions,
+                           mode="decode", caches=caches, window=window)
+    logits = logits_fn(cfg, params, x).astype(jnp.float32)
+    return logits, caches

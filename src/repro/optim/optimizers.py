@@ -1,0 +1,72 @@
+"""Minimal pure-JAX optimizers (the all-reduce DP baseline uses these;
+API-BCD's gAPI update is stateless and lives in repro.dist.trainer)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable            # params -> opt_state
+    update: Callable          # (grads, opt_state, params, lr) -> (updates, opt_state)
+
+
+def sgd(momentum: float = 0.0):
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params, lr):
+        del params
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: -lr * g, grads), ()
+        new_state = jax.tree.map(lambda m, g: momentum * m + g, state, grads)
+        return jax.tree.map(lambda m: -lr * m, new_state), new_state
+
+    return Optimizer(init, update)
+
+
+def adam(b1=0.9, b2=0.999, eps=1e-8):
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                         params)
+        return {"mu": z, "nu": jax.tree.map(jnp.zeros_like, z),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        del params
+        count = state["count"] + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype),
+                          state["mu"], grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(v.dtype)),
+            state["nu"], grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        upd = jax.tree.map(
+            lambda m, v: -lr * (m / c1) / (jnp.sqrt(v / c2) + eps), mu, nu)
+        return upd, {"mu": mu, "nu": nu, "count": count}
+
+    return Optimizer(init, update)
+
+
+def adamw(b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01):
+    base = adam(b1, b2, eps)
+
+    def update(grads, state, params, lr):
+        upd, state = base.update(grads, state, params, lr)
+        upd = jax.tree.map(
+            lambda u, p: u - lr * weight_decay * p.astype(u.dtype),
+            upd, params)
+        return upd, state
+
+    return Optimizer(base.init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)

@@ -1,0 +1,26 @@
+"""Learning-rate schedules (pure functions of the step index)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_decay(lr, total_steps, final_fraction=0.1):
+    def f(step):
+        frac = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return lr * (final_fraction + (1 - final_fraction) * cos)
+    return f
+
+
+def warmup_cosine(lr, warmup_steps, total_steps, final_fraction=0.1):
+    decay = cosine_decay(lr, max(total_steps - warmup_steps, 1),
+                         final_fraction)
+
+    def f(step):
+        warm = lr * step / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, decay(step - warmup_steps))
+    return f

@@ -1,0 +1,70 @@
+"""Parse compiled HLO text for collective traffic (roofline collective term).
+
+`compiled.cost_analysis()` has no collective-bytes entry, so we scan the
+(optimized) HLO for collective instructions and sum their result-shape
+bytes. Convention (documented in EXPERIMENTS.md):
+
+  * all-reduce        : 2 x result bytes (ring = reduce-scatter+all-gather)
+  * all-gather        : 1 x result bytes
+  * reduce-scatter    : 1 x operand bytes (~= result * shards; we use the
+                        larger shape found on the line)
+  * all-to-all        : 1 x result bytes
+  * collective-permute: 1 x result bytes
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast")
+
+_OP_RE = re.compile(
+    r"=\s*(?P<result>.*?)\s(?P<op>" + "|".join(COLLECTIVES) +
+    r")(?:-start|-done)?\(")
+
+
+def _shape_bytes(text):
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str):
+    """Returns (total_bytes, {op: bytes}, {op: count}).
+
+    Bytes are *global* logical traffic of the SPMD program (each collective
+    instruction appears once in the partitioned module and executes on
+    every device; result shapes are per-device shards).
+    """
+    by_op = defaultdict(int)
+    counts = defaultdict(int)
+    for line in hlo_text.splitlines():
+        mm = _OP_RE.search(line)
+        if not mm:
+            continue
+        if "-done(" in line:
+            continue   # async pair: count the -start only
+        op = mm.group("op")
+        result = mm.group("result")
+        b = _shape_bytes(result)
+        if op == "all-reduce":
+            b *= 2
+        counts[op] += 1
+        by_op[op] += b
+    return sum(by_op.values()), dict(by_op), dict(counts)

@@ -1,0 +1,57 @@
+"""Pytree utilities used across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x, y):
+    """alpha * x + y, leafwise."""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_dot(a, b):
+    leaves = jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b)
+    return jax.tree.reduce(jnp.add, leaves, jnp.asarray(0.0))
+
+
+def tree_sqnorm(a):
+    return tree_dot(a, a)
+
+
+def tree_norm(a):
+    return jnp.sqrt(tree_sqnorm(a))
+
+
+def tree_size(a):
+    """Total number of elements in the pytree."""
+    return sum(x.size for x in jax.tree.leaves(a))
+
+
+def tree_bytes(a):
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(a))
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), a)
+
+
+def tree_allfinite(a):
+    leaves = [jnp.all(jnp.isfinite(x)) for x in jax.tree.leaves(a)]
+    return jnp.all(jnp.stack(leaves))

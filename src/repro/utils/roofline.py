@@ -1,0 +1,81 @@
+"""Roofline terms for TPU v5e from dry-run compile artifacts.
+
+    compute term    = HLO_FLOPs    / (chips * PEAK_FLOPS)
+    memory term     = HLO_bytes    / (chips * HBM_BW)
+    collective term = coll_bytes   / (chips * ICI_BW)
+
+Hardware constants (per assignment): 197 TFLOP/s bf16 per chip, 819 GB/s
+HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    chips: int
+
+    @property
+    def compute_s(self):
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def memory_s(self):
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def collective_s(self):
+        return self.collective_bytes / (self.chips * ICI_BW)
+
+    @property
+    def dominant(self):
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    def as_dict(self):
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+        }
+
+
+def count_params(shapes_tree):
+    import jax
+    return sum(int(x.size) for x in jax.tree.leaves(shapes_tree))
+
+
+def active_params(cfg, total: int, expert_params: int = 0) -> float:
+    """MoE: active = dense + experts * (top_k + shared)/num_routed."""
+    if cfg.moe is None:
+        return float(total)
+    m = cfg.moe
+    routed = expert_params
+    dense = total - routed
+    return dense + routed * (m.top_k / m.num_experts)
+
+
+def model_flops(cfg, shape, total_params: float, act_params: float) -> float:
+    """6*N*D for train, 2*N*D forward-only (prefill / decode)."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * act_params * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * act_params * tokens
+    tokens = shape.global_batch * 1        # one decode token per sequence
+    return 2.0 * act_params * tokens

@@ -1,0 +1,13 @@
+import os
+import sys
+
+# Tests must see ONE CPU device (dry-run sets 512 in its own process only).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+# The convex reference path (theorem descent checks at ~1e-8 scale) needs
+# float64; model code uses explicit f32/bf16 dtypes throughout.
+jax.config.update("jax_enable_x64", True)
+
+sys.path.insert(0, os.path.dirname(__file__))  # for proptest helper

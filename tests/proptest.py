@@ -1,0 +1,30 @@
+"""Minimal seeded property-sweep helper (offline stand-in for `hypothesis`).
+
+`hypothesis` cannot be installed in this offline container, so we provide a
+tiny deterministic sweep decorator: the decorated test runs once per drawn
+case; failures report the seed for reproduction.
+"""
+from __future__ import annotations
+
+import functools
+import numpy as np
+import pytest
+
+
+def property_sweep(num_cases: int = 10, base_seed: int = 0):
+    """Parametrize a test over seeded RNGs: test(rng, ...) runs num_cases times."""
+
+    def deco(fn):
+        def wrapper(case_seed):
+            rng = np.random.default_rng(case_seed)
+            try:
+                return fn(rng)
+            except AssertionError as e:
+                raise AssertionError(f"[seed={case_seed}] {e}") from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return pytest.mark.parametrize(
+            "case_seed", [base_seed + i for i in range(num_cases)])(wrapper)
+
+    return deco

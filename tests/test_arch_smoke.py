@@ -1,0 +1,140 @@
+"""Per-architecture smoke tests: REDUCED variants (2 layers, d<=512,
+<=4 experts) run one forward/train step and one prefill+decode step on CPU,
+asserting output shapes and finiteness.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke
+from repro.models import build_model
+from repro.utils.pytree import tree_allfinite
+
+ARCHS = list(ARCH_IDS)
+
+
+def small_batch(cfg, rng, batch=2, seq=16):
+    i32 = jnp.int32
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, seq)), i32)
+    targ = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, seq)), i32)
+    b = {"tokens": toks, "targets": targ}
+    if cfg.family in ("audio", "encdec"):
+        b["frames"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.encoder_seq, cfg.d_model)),
+            jnp.float32)
+    if cfg.family == "vlm":
+        b["patches"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.num_patches, cfg.d_model)),
+            jnp.float32)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    rng = np.random.default_rng(0)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = small_batch(cfg, rng)
+
+    loss, metrics = jax.jit(model.train_loss)(params, batch)
+    assert loss.shape == ()
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+
+    # one gAPI-BCD-style gradient step must keep everything finite
+    grads = jax.grad(lambda p: model.train_loss(p, batch)[0])(params)
+    assert tree_allfinite(grads), f"{arch}: non-finite grads"
+    new_params = jax.tree.map(lambda p, g: p - 1e-3 * g.astype(p.dtype),
+                              params, grads)
+    loss2, _ = jax.jit(model.train_loss)(new_params, batch)
+    assert jnp.isfinite(loss2)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_and_decode(arch):
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    rng = np.random.default_rng(1)
+    params = model.init(jax.random.PRNGKey(1))
+    batch = small_batch(cfg, rng, batch=2, seq=8)
+    prompt = {k: v for k, v in batch.items() if k != "targets"}
+
+    logits, caches = jax.jit(model.prefill)(params, prompt)
+    assert logits.shape[0] == 2 and logits.shape[1] == 1
+    assert logits.shape[2] == cfg.vocab_size
+    assert jnp.isfinite(logits).all(), f"{arch}: non-finite prefill logits"
+
+    token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    seq_so_far = 8 + (cfg.num_patches if cfg.family == "vlm" else 0)
+    logits2, caches = jax.jit(model.decode_step)(params, token, caches,
+                                                 jnp.int32(seq_so_far))
+    assert logits2.shape == (2, 1, cfg.vocab_size)
+    assert jnp.isfinite(logits2).all(), f"{arch}: non-finite decode logits"
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "rwkv6-1.6b",
+                                  "recurrentgemma-2b"])
+def test_decode_matches_prefill(arch):
+    """Greedy decode continuation must agree with teacher-forced prefill:
+    prefill(t_0..t_{n}) last-logits == decode after prefill(t_0..t_{n-1})."""
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    rng = np.random.default_rng(2)
+    params = model.init(jax.random.PRNGKey(2))
+    seq = 12
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, seq)), jnp.int32)
+
+    # full prefill over seq tokens
+    full_logits, _ = jax.jit(model.prefill)(params, {"tokens": toks})
+    # prefill over seq-1, then decode the last token
+    from functools import partial
+    part_logits, caches = jax.jit(partial(model.prefill, cache_len=seq))(
+        params, {"tokens": toks[:, :-1]})
+    dec_logits, _ = jax.jit(model.decode_step)(
+        params, toks[:, -1:], caches, jnp.int32(seq - 1))
+
+    np.testing.assert_allclose(np.asarray(dec_logits[:, 0]),
+                               np.asarray(full_logits[:, -1]),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_full_configs_have_exact_assigned_hparams():
+    """The FULL configs must match the assignment table exactly."""
+    from repro.configs import get_config
+    c = get_config("qwen3-8b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (36, 4096, 32, 8, 12288, 151936)
+    c = get_config("deepseek-v2-236b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.vocab_size) == (
+        60, 5120, 128, 102400)
+    assert c.moe.num_experts == 160 and c.moe.top_k == 6
+    assert c.moe.num_shared_experts == 2 and c.mla.kv_lora_rank == 512
+    c = get_config("dbrx-132b")
+    assert c.moe.num_experts == 16 and c.moe.top_k == 4
+    assert (c.num_layers, c.d_model, c.d_ff) == (40, 6144, 10752)
+    c = get_config("rwkv6-1.6b")
+    assert (c.num_layers, c.d_model, c.d_ff, c.vocab_size) == (
+        24, 2048, 7168, 65536)
+    c = get_config("recurrentgemma-2b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads) == (
+        26, 2560, 10, 1)
+    assert c.layer_types.count("attn") == 8
+    assert c.layer_types.count("rglru") == 18   # 1 attn : 2 lru (+2 tail lru)
+    c = get_config("whisper-small")
+    assert (c.num_layers, c.encoder_layers, c.d_model, c.vocab_size) == (
+        12, 12, 768, 51865)
+    c = get_config("qwen2-0.5b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff) == (24, 896, 14, 2, 4864)
+    assert c.qkv_bias
+    c = get_config("internlm2-1.8b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (24, 2048, 16, 8, 8192, 92544)
+    c = get_config("phi-3-vision-4.2b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.d_ff, c.vocab_size) == (
+        32, 3072, 32, 8192, 32064)
+    c = get_config("nemotron-4-15b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (32, 6144, 48, 8, 24576, 256000)
+    assert c.mlp_type == "sq_relu"

@@ -1,0 +1,187 @@
+"""Convergence / consensus behaviour of the methods (paper Section 5 claims).
+
+Key facts tested:
+  * I-BCD is exact 2-block Gauss-Seidel on the strongly convex penalty
+    objective F (eq. 3): it must converge to the exact penalized optimum.
+  * API-BCD / gAPI-BCD share the same fixed point (all tokens equal at the
+    optimum of eq. 10): they must also converge to it.
+  * The penalized optimum approaches the centralized solution of (1) as
+    tau grows (the paper's "larger tau implies better agreement").
+  * WPG / DGD baselines converge (with their own bias/stepsize behaviour).
+  * Classification surrogates reach useful accuracy.
+"""
+import numpy as np
+import pytest
+
+from proptest import property_sweep
+from repro.core import (
+    APIBCD, DGD, GAPIBCD, IBCD, WPG,
+    centralized_solution, metropolis_hastings_matrix, random_graph,
+    ring_graph, run_serial,
+)
+from repro.core.baselines import apibcd_stale_fixed_point, penalized_solution
+from repro.core import losses as L
+from repro.data import make_problem
+
+
+def small_problem(rng, n_agents=6, p=5, d=30, noise=0.05):
+    feats, targs = [], []
+    x_true = rng.standard_normal(p)
+    for _ in range(n_agents):
+        a = rng.standard_normal((d, p))
+        b = a @ x_true + noise * rng.standard_normal(d)
+        feats.append(a)
+        targs.append(b)
+    ta = rng.standard_normal((50, p))
+    tb = ta @ x_true + noise * rng.standard_normal(50)
+    return L.Problem("lsq", tuple(feats), tuple(targs), p,
+                     test_features=ta, test_targets=tb)
+
+
+@property_sweep(num_cases=4)
+def test_ibcd_reaches_exact_penalized_optimum(rng):
+    problem = small_problem(rng)
+    tau = float(rng.uniform(0.5, 5.0))
+    xs_star, z_star = penalized_solution(problem, tau)
+    net = ring_graph(problem.num_agents)
+    method = IBCD(problem, tau=tau)
+    state = run_serial(method, net, num_iterations=400 * problem.num_agents)
+    assert np.linalg.norm(state.tokens[0] - z_star) < 1e-6, (
+        np.linalg.norm(state.tokens[0] - z_star))
+    assert np.abs(state.xs - xs_star).max() < 1e-6
+
+
+@property_sweep(num_cases=4)
+def test_apibcd_physical_reaches_stale_fixed_point(rng):
+    """Physical API-BCD (stale copies) converges to its exact fixed point.
+
+    Note this is NOT the minimizer of F (eq. 10): with stale local copies
+    each delta lands on one token only, so sum_m z_m tracks mean_i x_i
+    (see apibcd_stale_fixed_point docstring / paper Remark 2).
+    """
+    problem = small_problem(rng)
+    tau = float(rng.uniform(0.5, 3.0))
+    m = int(rng.integers(2, 4))
+    xs_star, _ = apibcd_stale_fixed_point(problem, tau, num_tokens=m)
+    net = ring_graph(problem.num_agents)
+    method = APIBCD(problem, tau=tau, num_walks=m)
+    state = run_serial(method, net, num_iterations=600 * problem.num_agents)
+    assert np.abs(state.xs - xs_star).max() < 1e-6, (
+        np.abs(state.xs - xs_star).max())
+
+
+@property_sweep(num_cases=4)
+def test_apibcd_fresh_view_reaches_penalized_optimum(rng):
+    """The fresh-token logical view (Thm 2 setting; what the mesh runtime
+    implements) minimizes F (eq. 10) exactly."""
+    problem = small_problem(rng)
+    tau = float(rng.uniform(0.5, 3.0))
+    m = int(rng.integers(2, 4))
+    xs_star, z_star = penalized_solution(problem, tau, num_tokens=m)
+    method = APIBCD(problem, tau=tau, num_walks=m)
+    state = method.init()
+    n = problem.num_agents
+    for k in range(400 * n):
+        state = method.update_fresh(state, k % n)
+    for w in range(m):
+        assert np.linalg.norm(state.tokens[w] - z_star) < 1e-6, (
+            f"walk {w}: {np.linalg.norm(state.tokens[w] - z_star)}")
+    assert np.abs(state.xs - xs_star).max() < 1e-6
+
+
+@property_sweep(num_cases=3)
+def test_gapibcd_reaches_stale_fixed_point(rng):
+    problem = small_problem(rng, n_agents=4, d=20)
+    tau = 2.0
+    m = 2
+    l = max(float(np.linalg.eigvalsh(a.T @ a / a.shape[0])[-1])
+            for a in problem.features)
+    xs_star, zbar = apibcd_stale_fixed_point(problem, tau, num_tokens=m)
+    net = ring_graph(problem.num_agents)
+    method = GAPIBCD(problem, tau=tau, num_walks=m, rho=l)
+    state = run_serial(method, net, num_iterations=2500 * problem.num_agents)
+    err = np.abs(state.xs - xs_star).max()
+    assert err < 1e-4, f"gAPI-BCD error to stale fixed point: {err:.2e}"
+
+
+def test_penalty_bias_shrinks_with_tau():
+    """Paper §2: larger tau implies better agreement between (2) and (3)."""
+    rng = np.random.default_rng(11)
+    problem = small_problem(rng)
+    x_star = centralized_solution(problem)
+    errs = []
+    for tau in (0.5, 5.0, 50.0, 500.0):
+        _, z_tau = penalized_solution(problem, tau)
+        errs.append(np.linalg.norm(z_tau - x_star) / np.linalg.norm(x_star))
+    assert all(errs[i + 1] < errs[i] for i in range(len(errs) - 1)), errs
+    assert errs[-1] < 1e-3, errs
+
+
+def test_ibcd_tracks_centralized_with_large_tau():
+    rng = np.random.default_rng(5)
+    problem = small_problem(rng)
+    x_star = centralized_solution(problem)
+    net = ring_graph(problem.num_agents)
+    method = IBCD(problem, tau=100.0)
+    state = run_serial(method, net, num_iterations=1500 * problem.num_agents)
+    err = np.linalg.norm(state.tokens[0] - x_star) / np.linalg.norm(x_star)
+    assert err < 0.02, f"I-BCD consensus error {err:.4f}"
+
+
+def test_wpg_converges():
+    rng = np.random.default_rng(3)
+    problem = small_problem(rng)
+    x_star = centralized_solution(problem)
+    net = ring_graph(problem.num_agents)
+    method = WPG(problem, alpha=0.05)
+    state = run_serial(method, net, num_iterations=800 * problem.num_agents)
+    err = np.linalg.norm(state.tokens[0] - x_star) / np.linalg.norm(x_star)
+    assert err < 0.05, f"WPG consensus error {err:.3f}"
+
+
+def test_dgd_converges():
+    rng = np.random.default_rng(4)
+    problem = small_problem(rng)
+    x_star = centralized_solution(problem)
+    net = random_graph(problem.num_agents, zeta=0.7, seed=1)
+    dgd = DGD(problem, alpha=0.05, mixing=metropolis_hastings_matrix(net))
+    xs = dgd.init()
+    for _ in range(1500):
+        xs = dgd.round(xs)
+    err = np.linalg.norm(xs.mean(axis=0) - x_star) / np.linalg.norm(x_star)
+    assert err < 0.05, f"DGD consensus error {err:.3f}"
+
+
+def test_classification_surrogate_trains():
+    problem = make_problem("ijcnn1", num_agents=6, subsample=1200)
+    net = ring_graph(6)
+    method = APIBCD(problem, tau=0.5, num_walks=2, newton_steps=15)
+    state = run_serial(method, net, num_iterations=240)
+    acc = L.evaluate(problem, method.model_estimate(state))
+    # random guessing = 0.5 on the +-1 surrogate
+    assert acc > 0.75, f"accuracy {acc:.3f}"
+
+
+def test_usps_softmax_surrogate_trains():
+    problem = make_problem("usps", num_agents=4, subsample=600)
+    net = ring_graph(4)
+    method = GAPIBCD(problem, tau=1.0, num_walks=2, rho=5.0)
+    state = run_serial(method, net, num_iterations=800)
+    acc = L.evaluate(problem, method.model_estimate(state))
+    # random guessing = 0.1 on 10 classes
+    assert acc > 0.5, f"accuracy {acc:.3f}"
+
+
+def test_larger_tau_tightens_consensus():
+    """Penalty parameter behaviour: larger tau => x_i closer to z (paper §2)."""
+    rng = np.random.default_rng(7)
+    problem = small_problem(rng)
+    net = ring_graph(problem.num_agents)
+    gaps = []
+    for tau in (1.0, 100.0):
+        method = IBCD(problem, tau=tau)
+        state = run_serial(method, net,
+                           num_iterations=200 * problem.num_agents)
+        gap = np.linalg.norm(state.xs - state.tokens[0], axis=1).max()
+        gaps.append(gap)
+    assert gaps[1] < gaps[0], f"consensus gap did not shrink: {gaps}"

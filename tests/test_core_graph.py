@@ -1,0 +1,69 @@
+"""Topology and walk-rule tests."""
+import numpy as np
+import pytest
+
+from proptest import property_sweep
+from repro.core import (
+    CyclicWalk, MarkovWalk, hamiltonian_cycle, metropolis_hastings_matrix,
+    random_graph, ring_graph, complete_graph, spread_token_starts,
+    uniform_neighbor_matrix,
+)
+
+
+@property_sweep(num_cases=6)
+def test_random_graph_connected_and_dense_enough(rng):
+    n = int(rng.integers(5, 40))
+    zeta = float(rng.uniform(0.2, 1.0))
+    net = random_graph(n, zeta, seed=int(rng.integers(1000)))
+    assert net.is_connected()
+    target = round(n * (n - 1) / 2 * zeta)
+    assert net.num_links >= min(target, n)
+    # symmetric adjacency, no self loops checked in constructor
+
+
+def test_ring_and_complete():
+    assert ring_graph(5).num_links == 5
+    assert complete_graph(5).num_links == 10
+    assert ring_graph(7).is_connected()
+
+
+@property_sweep(num_cases=5)
+def test_mh_matrix_doubly_stochastic(rng):
+    net = random_graph(int(rng.integers(4, 20)), 0.6,
+                       seed=int(rng.integers(100)))
+    p = metropolis_hastings_matrix(net)
+    np.testing.assert_allclose(p.sum(axis=0), 1.0, atol=1e-12)
+    np.testing.assert_allclose(p.sum(axis=1), 1.0, atol=1e-12)
+    assert (p >= 0).all()
+    # only graph edges (or self) may carry probability
+    off = p * (~net.adjacency & ~np.eye(net.num_agents, dtype=bool))
+    assert np.abs(off).max() == 0.0
+
+
+@property_sweep(num_cases=5)
+def test_markov_walk_stays_on_edges(rng):
+    net = random_graph(10, 0.5, seed=int(rng.integers(100)))
+    walk = MarkovWalk(uniform_neighbor_matrix(net))
+    cur = 0
+    for _ in range(200):
+        nxt = walk.next_agent(cur, rng)
+        assert net.adjacency[cur, nxt], "walk left the graph"
+        cur = nxt
+
+
+def test_cyclic_walk_covers_all_agents():
+    net = random_graph(12, 0.7, seed=0)
+    order = hamiltonian_cycle(net)
+    walk = CyclicWalk(order)
+    rng = np.random.default_rng(0)
+    cur, seen = 0, {0}
+    for _ in range(11):
+        cur = walk.next_agent(cur, rng)
+        seen.add(cur)
+    assert seen == set(range(12))
+
+
+def test_spread_token_starts():
+    np.testing.assert_array_equal(spread_token_starts(16, 4), [0, 4, 8, 12])
+    np.testing.assert_array_equal(spread_token_starts(10, 3), [0, 3, 6])
+    assert len(set(spread_token_starts(16, 5).tolist())) == 5

@@ -1,0 +1,205 @@
+"""Kernel validation: interpret-mode Pallas vs pure-jnp oracles, swept
+over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+TOL = {jnp.float32: dict(rtol=1e-5, atol=1e-5),
+       jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+# ---------------------------------------------------------------------------
+# prox_update
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(64,), (300,), (8, 130), (3, 5, 257)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_prox_update(shape, dtype):
+    rng = np.random.default_rng(0)
+    x = _rand(rng, shape, dtype)
+    g = _rand(rng, shape, dtype)
+    z = _rand(rng, shape, dtype)
+    args = dict(tau=0.1, rho=1.0, num_walks=4, num_agents=16)
+    xk, dk = ops.prox_update(x, g, z, **args, interpret=True)
+    xr, dr = ref.prox_update(x, g, z, **args)
+    np.testing.assert_allclose(np.asarray(xk, np.float32),
+                               np.asarray(xr, np.float32), **TOL[dtype])
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dr),
+                               **TOL[dtype])
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("s,t,h,kv,hd,window", [
+    (128, 128, 4, 4, 64, 0),       # MHA causal
+    (256, 256, 4, 2, 64, 0),       # GQA
+    (256, 256, 4, 1, 32, 64),      # MQA sliding window
+    (96, 96, 2, 2, 64, 0),         # non-multiple of block
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(s, t, h, kv, hd, window, dtype):
+    rng = np.random.default_rng(1)
+    b = 2
+    q = _rand(rng, (b, s, h, hd), dtype)
+    k = _rand(rng, (b, t, kv, hd), dtype)
+    v = _rand(rng, (b, t, kv, hd), dtype)
+    out = ops.flash_attention(q, k, v, causal=True, window=window,
+                              block_q=64, block_k=64, interpret=True)
+    # oracle works in [B,H,S,hd]
+    q2 = q.transpose(0, 2, 1, 3)
+    k2 = k.transpose(0, 2, 1, 3)
+    v2 = v.transpose(0, 2, 1, 3)
+    want = ref.attention(q2, k2, v2, causal=True, window=window)
+    want = want.transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_flash_attention_matches_model_reference():
+    """The model's chunked_attention and the kernel agree (same math)."""
+    from repro.models.attention import chunked_attention
+    rng = np.random.default_rng(2)
+    b, s, kv, g, hd = 2, 128, 2, 3, 32
+    q = _rand(rng, (b, s, kv, g, hd), jnp.float32)
+    k = _rand(rng, (b, s, kv, hd), jnp.float32)
+    v = _rand(rng, (b, s, kv, hd), jnp.float32)
+    want = chunked_attention(q, k, v, causal=True, q_chunk=64, kv_chunk=64)
+    qk = q.reshape(b, s, kv * g, hd)
+    out = ops.flash_attention(qk, k, v, causal=True, block_q=64,
+                              block_k=64, interpret=True)
+    out = out.reshape(b, s, kv, g, hd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("t,h,kv,hd,valid", [
+    (512, 8, 8, 64, None),
+    (512, 8, 2, 64, None),
+    (384, 4, 1, 128, 200),        # partial ring + MQA
+    (1000, 4, 2, 64, 1000),       # non-multiple of block
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(t, h, kv, hd, valid, dtype):
+    rng = np.random.default_rng(3)
+    b = 2
+    q = _rand(rng, (b, h, hd), dtype)
+    k = _rand(rng, (b, t, kv, hd), dtype)
+    v = _rand(rng, (b, t, kv, hd), dtype)
+    out = ops.decode_attention(q, k, v, valid_len=valid, block_k=128,
+                               interpret=True)
+    want = ref.decode_attention(q, k.transpose(0, 2, 1, 3),
+                                v.transpose(0, 2, 1, 3), valid_len=valid)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+# ---------------------------------------------------------------------------
+# rwkv6
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("s,hd,chunk", [(64, 32, 32), (130, 64, 64),
+                                        (96, 64, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_rwkv6_scan(s, hd, chunk, dtype):
+    rng = np.random.default_rng(4)
+    b, h = 2, 3
+    r = _rand(rng, (b, h, s, hd), dtype)
+    k = _rand(rng, (b, h, s, hd), dtype)
+    v = _rand(rng, (b, h, s, hd), dtype)
+    w = jnp.asarray(rng.uniform(0.2, 0.99, (b, h, s, hd)), dtype)
+    u = _rand(rng, (h, hd), dtype)
+    out = ops.rwkv6_scan(r, k, v, w, u, chunk=chunk, interpret=True)
+    want, _ = ref.rwkv6(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rwkv6_scan_bf16():
+    rng = np.random.default_rng(5)
+    b, h, s, hd = 1, 2, 64, 64
+    r = _rand(rng, (b, h, s, hd), jnp.bfloat16)
+    k = _rand(rng, (b, h, s, hd), jnp.bfloat16)
+    v = _rand(rng, (b, h, s, hd), jnp.bfloat16)
+    w = jnp.asarray(rng.uniform(0.5, 0.99, (b, h, s, hd)), jnp.bfloat16)
+    u = _rand(rng, (h, hd), jnp.bfloat16)
+    out = ops.rwkv6_scan(r, k, v, w, u, chunk=32, interpret=True)
+    want, _ = ref.rwkv6(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-1, atol=1e-1)
+
+
+# ---------------------------------------------------------------------------
+# rg-lru
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("s,w,chunk,block_w", [
+    (64, 256, 32, 128), (100, 130, 64, 512), (256, 512, 128, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rglru_scan(s, w, chunk, block_w, dtype):
+    rng = np.random.default_rng(6)
+    b = 2
+    a = jnp.asarray(rng.uniform(0.3, 0.999, (b, s, w)), dtype)
+    u = _rand(rng, (b, s, w), dtype)
+    out = ops.rglru_scan(a, u, chunk=chunk, block_w=block_w,
+                         interpret=True)
+    want, _ = ref.rglru(a, u)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               **TOL[dtype])
+
+
+# ---------------------------------------------------------------------------
+# model-integration oracle checks: the model blocks implement the same
+# math the kernels implement (transitively: model == kernel)
+# ---------------------------------------------------------------------------
+
+
+def test_rwkv_model_block_matches_kernel_math():
+    from repro.configs import get_smoke
+    from repro.models import rwkv6 as RW
+    cfg = get_smoke("rwkv6-1.6b")
+    params = RW.rwkv_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    rng = np.random.default_rng(7)
+    b, s, d = 2, 16, cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    x = _rand(rng, (b, s, d), jnp.float32)
+    state = RW.init_state(cfg, b)
+
+    out_model, _ = RW.time_mix(params, cfg, x, state)
+
+    # reproduce projections, then compare the recurrence core to the kernel
+    xs = RW._token_shift(x, state["shift"], params["mu"])
+    r = (xs["r"] @ params["wr"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = (xs["k"] @ params["wk"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = (xs["v"] @ params["wv"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    w = params["w0"] + jnp.tanh(
+        xs["w"] @ params["w_lora_a"]) @ params["w_lora_b"]
+    w = jnp.exp(-jnp.exp(w.astype(jnp.float32)))
+    w = w.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+
+    core_kernel = ops.rwkv6_scan(r, k, v, w, params["u"], chunk=16,
+                                 interpret=True)
+    core_ref, _ = ref.rwkv6(r, k, v, w, params["u"])
+    np.testing.assert_allclose(np.asarray(core_kernel),
+                               np.asarray(core_ref), rtol=2e-4, atol=2e-4)
