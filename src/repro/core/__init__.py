@@ -1,7 +1,8 @@
 """Core: the paper's contribution — incremental BCD decentralized learning.
 
 Exports the convex reference implementations (Algorithms 1-2, gAPI-BCD,
-baselines, async simulator) and the sharded mesh trainer.
+baselines, async simulator). The sharded mesh trainer that realizes the
+same superstep on device meshes lives in `repro.dist.trainer`.
 """
 from repro.core.graph import (  # noqa: F401
     CyclicWalk,

@@ -111,6 +111,82 @@ def penalty_objective(problem: Problem, xs: jnp.ndarray, zs: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# batched (agent-indexed) losses — one jitted callable for all N agents
+# ---------------------------------------------------------------------------
+
+
+def _stacked_data(problem: Problem):
+    """Pad per-agent shards to a common row count and stack.
+
+    Returns (features [N, dmax, p], targets [N, dmax], mask [N, dmax],
+    counts [N]).  `np.array_split` shards differ by at most one row, so
+    the padding overhead is negligible.  Padded feature rows are zero;
+    padded targets are 0 (masked out where the per-sample loss of a zero
+    row is nonzero).
+    """
+    n = problem.num_agents
+    dmax = max(f.shape[0] for f in problem.features)
+    p = problem.features[0].shape[1]
+    tgt_dtype = np.asarray(problem.targets[0]).dtype
+    feats = np.zeros((n, dmax, p))
+    targs = np.zeros((n, dmax), dtype=tgt_dtype)
+    mask = np.zeros((n, dmax))
+    for i, (f, t) in enumerate(zip(problem.features, problem.targets)):
+        d = f.shape[0]
+        feats[i, :d] = f
+        targs[i, :d] = t
+        mask[i, :d] = 1.0
+    counts = np.array([f.shape[0] for f in problem.features], dtype=float)
+    return (jnp.asarray(feats), jnp.asarray(targs), jnp.asarray(mask),
+            jnp.asarray(counts))
+
+
+def make_batched_local_loss(problem: Problem) -> Callable:
+    """Returns f(agent, x) -> f_agent(x), agent a traced index.
+
+    One function (and one jit cache entry) covers all N agents: the
+    agent's shard is selected with `jnp.take`, so compile cost is O(1)
+    in N instead of the O(N) of building per-agent closures.  Matches
+    `make_local_loss(problem, i)(x)` exactly (padded rows contribute 0).
+    """
+    feats, targs, mask, counts = _stacked_data(problem)
+
+    if problem.kind == "lsq":
+        def loss(agent, x):
+            a = jnp.take(feats, agent, axis=0)
+            b = jnp.take(targs, agent, axis=0)
+            r = a @ x - b                   # padded rows: 0 @ x - 0 = 0
+            return 0.5 * jnp.sum(r * r) / jnp.take(counts, agent)
+        return loss
+
+    if problem.kind == "logistic":
+        def loss(agent, x):
+            a = jnp.take(feats, agent, axis=0)
+            y = jnp.take(targs, agent, axis=0)
+            m = jnp.take(mask, agent, axis=0)
+            margins = y * (a @ x)
+            return (jnp.sum(m * jnp.logaddexp(0.0, -margins))
+                    / jnp.take(counts, agent))
+        return loss
+
+    if problem.kind == "softmax":
+        num_classes = problem.num_classes
+
+        def loss(agent, x):
+            a = jnp.take(feats, agent, axis=0)
+            y = jnp.take(targs, agent, axis=0)
+            m = jnp.take(mask, agent, axis=0)
+            w = x.reshape(a.shape[1], num_classes)
+            logits = a @ w
+            logz = jax.nn.logsumexp(logits, axis=1)
+            ll = logits[jnp.arange(a.shape[0]), y] - logz
+            return -jnp.sum(m * ll) / jnp.take(counts, agent)
+        return loss
+
+    raise ValueError(problem.kind)
+
+
+# ---------------------------------------------------------------------------
 # proximal solvers:  argmin_x f_i(x) + (tau/2) sum_m ||x - z_m||^2
 # ---------------------------------------------------------------------------
 
@@ -152,6 +228,63 @@ def make_prox_solver(problem: Problem, agent: int, tau: float,
         def body(x, _):
             g = grad_fn(x, z_sum)
             hvp = lambda v: jax.jvp(lambda xx: grad_fn(xx, z_sum), (x,), (v,))[1]
+            step, _ = jax.scipy.sparse.linalg.cg(hvp, g, maxiter=20)
+            return x - step, None
+
+        x, _ = jax.lax.scan(body, x0, None, length=newton_steps)
+        return x
+
+    return prox_newton
+
+
+def make_batched_prox_solver(problem: Problem, tau: float,
+                             num_tokens: int = 1,
+                             newton_steps: int = 20) -> Callable:
+    """Agent-indexed prox solver: prox(agent, z_sum, x0) -> x_new.
+
+    Same math as `make_prox_solver(problem, i, ...)` but a single
+    callable for all agents (jnp.take over stacked per-agent data /
+    pre-factorized Cholesky stacks), so jitting it once replaces N
+    separate compilations.
+    """
+    m = float(num_tokens)
+
+    if problem.kind == "lsq":
+        chols, atbs = [], []
+        for i in range(problem.num_agents):
+            a = jnp.asarray(problem.features[i])
+            b = jnp.asarray(problem.targets[i])
+            d = a.shape[0]
+            gram = a.T @ a / d + tau * m * jnp.eye(a.shape[1])
+            chols.append(jax.scipy.linalg.cho_factor(gram)[0])
+            atbs.append(a.T @ b / d)
+        chols = jnp.stack(chols)
+        atbs = jnp.stack(atbs)
+
+        def prox_lsq(agent, z_sum, x0):
+            del x0
+            c = jnp.take(chols, agent, axis=0)
+            atb = jnp.take(atbs, agent, axis=0)
+            return jax.scipy.linalg.cho_solve((c, False), atb + tau * z_sum)
+
+        return prox_lsq
+
+    loss = make_batched_local_loss(problem)
+
+    def objective(x, z_sum, agent):
+        # sum_m ||x - z_m||^2 = M||x||^2 - 2<x, z_sum> + const
+        return loss(agent, x) + 0.5 * tau * (
+            m * jnp.vdot(x, x) - 2 * jnp.vdot(x, z_sum))
+
+    grad_fn = jax.grad(objective)
+
+    def prox_newton(agent, z_sum, x0):
+        """Damped Newton with Hessian-vector CG (see make_prox_solver)."""
+
+        def body(x, _):
+            g = grad_fn(x, z_sum, agent)
+            hvp = lambda v: jax.jvp(
+                lambda xx: grad_fn(xx, z_sum, agent), (x,), (v,))[1]
             step, _ = jax.scipy.sparse.linalg.cg(hvp, g, maxiter=20)
             return x - step, None
 

@@ -95,17 +95,17 @@ class IBCD(IncrementalMethod):
     def __init__(self, problem: L.Problem, tau: float, newton_steps: int = 20):
         super().__init__(problem, num_walks=1)
         self.tau = tau
-        self._prox = [
-            jax.jit(L.make_prox_solver(problem, i, tau, 1, newton_steps))
-            for i in range(problem.num_agents)
-        ]
+        # one agent-indexed jitted solver for all N agents (O(1) compiles)
+        self._prox = jax.jit(
+            L.make_batched_prox_solver(problem, tau, 1, newton_steps))
 
     def update(self, state: MethodState, agent: int, walk: int = 0) -> MethodState:
         n = self.problem.num_agents
         s = state.copy()
         z = s.tokens[0]
         x_old = s.xs[agent].copy()
-        x_new = np.asarray(self._prox[agent](jnp.asarray(z), jnp.asarray(x_old)))
+        x_new = np.asarray(
+            self._prox(agent, jnp.asarray(z), jnp.asarray(x_old)))
         s.xs[agent] = x_new
         s.tokens[0] = z + (x_new - x_old) / n          # eq. (8)
         s.iteration += 1
@@ -136,10 +136,8 @@ class APIBCD(IncrementalMethod):
                  newton_steps: int = 20):
         super().__init__(problem, num_walks=num_walks)
         self.tau = tau
-        self._prox = [
-            jax.jit(L.make_prox_solver(problem, i, tau, num_walks, newton_steps))
-            for i in range(problem.num_agents)
-        ]
+        self._prox = jax.jit(
+            L.make_batched_prox_solver(problem, tau, num_walks, newton_steps))
 
     def update(self, state: MethodState, agent: int, walk: int) -> MethodState:
         n = self.problem.num_agents
@@ -148,7 +146,7 @@ class APIBCD(IncrementalMethod):
         z_sum = s.zhat[agent].sum(axis=0)
         x_old = s.xs[agent].copy()
         x_new = np.asarray(
-            self._prox[agent](jnp.asarray(z_sum), jnp.asarray(x_old)))
+            self._prox(agent, jnp.asarray(z_sum), jnp.asarray(x_old)))
         s.xs[agent] = x_new                              # (12a)
         s.tokens[walk] = s.tokens[walk] + (x_new - x_old) / n   # (12b)
         s.zhat[agent, walk] = s.tokens[walk]             # (12c)
@@ -169,7 +167,7 @@ class APIBCD(IncrementalMethod):
         z_sum = s.tokens.sum(axis=0)
         x_old = s.xs[agent].copy()
         x_new = np.asarray(
-            self._prox[agent](jnp.asarray(z_sum), jnp.asarray(x_old)))
+            self._prox(agent, jnp.asarray(z_sum), jnp.asarray(x_old)))
         s.xs[agent] = x_new
         s.tokens = s.tokens + (x_new - x_old)[None, :] / n      # (12b) all m
         s.zhat[:] = s.tokens[None, :, :]
@@ -199,10 +197,8 @@ class GAPIBCD(IncrementalMethod):
         super().__init__(problem, num_walks=num_walks)
         self.tau = tau
         self.rho = rho
-        self._grad = [
-            jax.jit(jax.grad(L.make_local_loss(problem, i)))
-            for i in range(problem.num_agents)
-        ]
+        self._grad = jax.jit(
+            jax.grad(L.make_batched_local_loss(problem), argnums=1))
 
     def update(self, state: MethodState, agent: int, walk: int) -> MethodState:
         n, m = self.problem.num_agents, self.num_walks
@@ -210,7 +206,7 @@ class GAPIBCD(IncrementalMethod):
         s.zhat[agent, walk] = s.tokens[walk]
         z_sum = s.zhat[agent].sum(axis=0)
         x_old = s.xs[agent].copy()
-        g = np.asarray(self._grad[agent](jnp.asarray(x_old)))
+        g = np.asarray(self._grad(agent, jnp.asarray(x_old)))
         x_new = (self.rho * x_old - g + self.tau * z_sum) / (self.rho + self.tau * m)
         s.xs[agent] = x_new                              # (15) closed form
         s.tokens[walk] = s.tokens[walk] + (x_new - x_old) / n
@@ -225,7 +221,7 @@ class GAPIBCD(IncrementalMethod):
         s.zhat[:] = s.tokens[None, :, :]
         z_sum = s.tokens.sum(axis=0)
         x_old = s.xs[agent].copy()
-        g = np.asarray(self._grad[agent](jnp.asarray(x_old)))
+        g = np.asarray(self._grad(agent, jnp.asarray(x_old)))
         x_new = (self.rho * x_old - g + self.tau * z_sum) / (self.rho + self.tau * m)
         s.xs[agent] = x_new
         s.tokens = s.tokens + (x_new - x_old)[None, :] / n

@@ -10,7 +10,7 @@ M tokens walk the graph concurrently and *asynchronously*: each token is an
 independent event stream; an agent busy with one token delays another token
 that arrives meanwhile (single-threaded agents). This realizes the true
 asynchronous execution of Algorithm 2 — the mesh runtime in
-`repro.core.sharded` realizes the synchronous fresh-token logical view the
+`repro.dist.trainer` realizes the synchronous fresh-token logical view the
 theory analyzes; the simulator is where wall-clock asynchrony lives.
 
 Synchronous gossip baselines (DGD) are simulated round-based: every round

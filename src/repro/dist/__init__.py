@@ -1,0 +1,19 @@
+"""repro.dist — the sharded API-BCD mesh runtime + batched serving.
+
+Four modules realize the paper's Algorithm 2 (gAPI-BCD variant, eq. 15 +
+12b) as an SPMD program over the ("agent", "replica", "model") mesh, plus
+the serving-side distribution plan and a host-level batched server:
+
+  sharding  — PartitionSpec inference (greedy divisible-dim assignment)
+              and the concrete sharding trees for train state, batches,
+              serving params and KV caches.
+  trainer   — init_train_state / make_train_step (the token-ring
+              superstep) / make_dp_baseline_step (all-reduce baseline).
+  serving   — prefill/decode step builders on the production mesh.
+  server    — BatchedServer: wave batching, EOS stop, per-request budgets.
+
+The event-driven *asynchronous* semantics of Algorithm 2 live in
+`repro.core.simulator`; this package realizes the fresh-token synchronous
+logical view analyzed by Theorems 2/3 on real device meshes.
+"""
+from repro.dist import server, serving, sharding, trainer  # noqa: F401

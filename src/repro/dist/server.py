@@ -1,0 +1,144 @@
+"""Host-level batched greedy-decode server.
+
+Requests queue up with per-request `max_new_tokens` budgets and optional
+EOS ids.  `step()` serves one *wave*: all pending requests whose prompt
+length equals the earliest pending request's (up to `max_batch`), so a
+wave shares one prefill shape and one decode loop.  Budgets inside a
+wave may differ — the wave decodes to the longest budget (right-padding
+the shorter requests' generations), each request's output is then
+truncated to its own budget and at its EOS token (inclusive), and the
+loop exits early once every request in the wave is finished.
+
+Greedy decode is row-independent (no cross-batch ops anywhere in the
+model), so a request served inside a wave produces bit-identical output
+to the same request served alone — batching is semantically inert
+(tests/test_server.py asserts this).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    output: Optional[np.ndarray] = None
+
+
+class BatchedServer:
+    """Wave-batching greedy-decode server over one model + params."""
+
+    def __init__(self, model, params, max_batch: int = 8):
+        self.model = model
+        self.params = params
+        self.max_batch = int(max_batch)
+        self._queue: List[Request] = []
+        self._done: List[Request] = []
+        self._next_uid = 0
+        self._prefill_fns: Dict[int, callable] = {}
+        self._decode = jax.jit(self.model.decode_step)
+
+    # ------------------------------------------------------------------
+    # request intake
+    # ------------------------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int,
+               eos_id: Optional[int] = None) -> int:
+        """Queue a prompt; returns the request uid."""
+        prompt = np.asarray(prompt, np.int32)
+        assert prompt.ndim == 1 and prompt.size > 0, prompt.shape
+        assert max_new_tokens >= 1, max_new_tokens
+        uid = self._next_uid
+        self._next_uid += 1
+        self._queue.append(Request(uid, prompt, int(max_new_tokens),
+                                   None if eos_id is None else int(eos_id)))
+        return uid
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # ------------------------------------------------------------------
+    # serving
+    # ------------------------------------------------------------------
+
+    def _prefill(self, cache_len):
+        fn = self._prefill_fns.get(cache_len)
+        if fn is None:
+            fn = jax.jit(partial(self.model.prefill, cache_len=cache_len))
+            self._prefill_fns[cache_len] = fn
+        return fn
+
+    def _take_wave(self) -> List[Request]:
+        plen = len(self._queue[0].prompt)
+        wave, rest = [], []
+        for r in self._queue:
+            if len(r.prompt) == plen and len(wave) < self.max_batch:
+                wave.append(r)
+            else:
+                rest.append(r)
+        self._queue = rest
+        return wave
+
+    def _serve_wave(self, wave: List[Request]) -> None:
+        plen = len(wave[0].prompt)
+        budget = max(r.max_new_tokens for r in wave)
+        toks = jnp.asarray(np.stack([r.prompt for r in wave]), jnp.int32)
+
+        logits, caches = self._prefill(plen + budget)(
+            self.params, {"tokens": toks})
+        token = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        generated = [np.asarray(token)]
+
+        finished = np.array(
+            [r.max_new_tokens == 1
+             or (r.eos_id is not None and int(t) == r.eos_id)
+             for r, t in zip(wave, generated[0][:, 0])], bool)
+        for i in range(1, budget):
+            if finished.all():
+                break
+            logits, caches = self._decode(self.params, token, caches,
+                                          jnp.int32(plen + i - 1))
+            token = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+            generated.append(np.asarray(token))
+            for j, r in enumerate(wave):
+                if finished[j]:
+                    continue
+                t = int(generated[-1][j, 0])
+                if (i + 1 >= r.max_new_tokens
+                        or (r.eos_id is not None and t == r.eos_id)):
+                    finished[j] = True
+
+        seq = np.concatenate(generated, axis=1)        # [b, <=budget]
+        for j, r in enumerate(wave):
+            out = seq[j, : r.max_new_tokens]
+            if r.eos_id is not None:
+                hits = np.nonzero(out == r.eos_id)[0]
+                if hits.size:
+                    out = out[: hits[0] + 1]           # EOS inclusive
+            r.output = np.asarray(out, np.int32)
+
+    def step(self) -> List[Request]:
+        """Serve one wave; returns the requests completed by it."""
+        if not self._queue:
+            return []
+        wave = self._take_wave()
+        self._serve_wave(wave)
+        self._done.extend(wave)
+        return wave
+
+    def run(self) -> List[Request]:
+        """Drain the queue; returns every request completed so far
+        (accumulating across earlier step() calls)."""
+        while self._queue:
+            self.step()
+        return list(self._done)

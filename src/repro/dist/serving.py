@@ -1,0 +1,58 @@
+"""Serving-side distribution plans on the production mesh.
+
+`make_prefill_step` / `make_decode_step` wrap the model's prefill and
+single-token decode entry points in jit with explicit in-shardings:
+parameters tensor-parallel over "model", activations/batches over the
+data axes, KV caches batch-sharded with kv-head / latent dims over
+"model" (the decode-attention Pallas kernel then runs on the local
+shard).  Both return (jitted_fn, shardings) so the dry-run can lower
+against abstract ShapeDtypeStructs without allocating 100B-scale params.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import (batch_shardings, cache_shardings,
+                                 greedy_spec)
+
+
+def data_axes(mesh):
+    """The data-parallel (batch) axes of a mesh, pod-major."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def serve_param_shardings(mesh, params_shapes):
+    """Tensor-parallel over "model", replicated over the data axes."""
+    axes = {"model": mesh.shape.get("model", 1)}
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, greedy_spec(s.shape, axes)),
+        params_shapes)
+
+
+def _param_shapes(model):
+    return jax.eval_shape(model.init,
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def make_prefill_step(model, mesh, batch_shapes):
+    """Returns (jitted prefill(params, batch), (p_sh, b_sh))."""
+    p_sh = serve_param_shardings(mesh, _param_shapes(model))
+    b_sh = batch_shardings(mesh, batch_shapes, batch_axes=data_axes(mesh))
+    fn = jax.jit(lambda params, batch: model.prefill(params, batch),
+                 in_shardings=(p_sh, b_sh))
+    return fn, (p_sh, b_sh)
+
+
+def make_decode_step(model, mesh, token_shapes, cache_shapes):
+    """Returns (jitted decode(params, token, caches, position),
+    (p_sh, t_sh, c_sh))."""
+    p_sh = serve_param_shardings(mesh, _param_shapes(model))
+    t_sh = batch_shardings(mesh, token_shapes, batch_axes=data_axes(mesh))
+    c_sh = cache_shardings(mesh, cache_shapes)
+    fn = jax.jit(
+        lambda params, token, caches, position:
+            model.decode_step(params, token, caches, position),
+        in_shardings=(p_sh, t_sh, c_sh, None))
+    return fn, (p_sh, t_sh, c_sh)

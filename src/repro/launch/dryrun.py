@@ -191,6 +191,8 @@ def lower_combo(arch: str, shape_name: str, multi_pod: bool = False,
     coll_by_op = {k: v * chips for k, v in stats["collectives"].items()}
     coll_counts = stats["collective_counts"]
     xla_cost = compiled.cost_analysis() or {}
+    if isinstance(xla_cost, (list, tuple)):     # older jaxlib: [dict]
+        xla_cost = xla_cost[0] if xla_cost else {}
 
     mem = compiled.memory_analysis()
     mem_info = {}
