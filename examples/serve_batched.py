@@ -1,26 +1,29 @@
-"""Batched serving example: prefill a prompt batch, stream greedy decode.
+"""Continuous-batching serving example (repro.serve.Engine).
 
-    PYTHONPATH=src python examples/serve_batched.py --arch rwkv6-1.6b
+    PYTHONPATH=src python examples/serve_batched.py --arch qwen2-0.5b
 
-Uses the reduced smoke config of the chosen architecture (CPU-feasible);
-on a TPU slice, drop --smoke-config and point at the full config.
+Submits a mixed workload (short and long generation budgets) to the
+slot-arena engine: requests are admitted into freed slots between decode
+steps, so short requests finish and leave while long ones keep decoding
+— no wave convoy.  Uses the reduced smoke config (CPU-feasible); on a
+TPU slice, build the full config and pass a mesh to Engine.
 """
 import argparse
 import time
-from functools import partial
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke
 from repro.models import build_model
+from repro.serve import Engine, bucket_length
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-batch", type=int, default=3)
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--new-tokens", type=int, default=12)
     args = ap.parse_args()
@@ -30,43 +33,25 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
 
-    b, p = args.batch, args.prompt_len
-    prompt = {"tokens": jnp.asarray(
-        rng.integers(0, cfg.vocab_size, (b, p)), jnp.int32)}
-    if cfg.family in ("audio", "encdec"):
-        prompt["frames"] = jnp.asarray(
-            rng.standard_normal((b, cfg.encoder_seq, cfg.d_model)),
-            jnp.float32)
-    if cfg.family == "vlm":
-        prompt["patches"] = jnp.asarray(
-            rng.standard_normal((b, cfg.num_patches, cfg.d_model)),
-            jnp.float32)
-    prefix = cfg.num_patches if cfg.family == "vlm" else 0
-
-    total = p + prefix + args.new_tokens
-    prefill = jax.jit(partial(model.prefill, cache_len=total))
-    decode = jax.jit(model.decode_step)
-
+    eng = Engine(model, params, max_batch=args.max_batch,
+                 max_len=bucket_length(args.prompt_len + args.new_tokens))
+    budgets = [max(1, args.new_tokens // 4) if i % 2 else args.new_tokens
+               for i in range(args.requests)]
     t0 = time.time()
-    logits, caches = prefill(params, prompt)
-    logits.block_until_ready()
-    print(f"[{cfg.name}] prefill {b}x{p}: {time.time() - t0:.3f}s")
+    uids = [eng.submit(rng.integers(0, cfg.vocab_size, (args.prompt_len,)),
+                       max_new_tokens=b) for b in budgets]
 
-    token = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-    generated = [token]
-    t0 = time.time()
-    for i in range(args.new_tokens):
-        logits, caches = decode(params, token, caches,
-                                jnp.int32(p + prefix + i))
-        token = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-        generated.append(token)
-    token.block_until_ready()
+    steps = 0
+    while eng.pending or eng.num_active:
+        for r in eng.step():
+            print(f"  [{time.time() - t0:6.3f}s, step {steps:3d}] "
+                  f"uid {r.uid} done: {len(r.output)} tokens "
+                  f"-> {r.output[:8].tolist()}{'...' if len(r.output) > 8 else ''}")
+        steps += 1
     dt = time.time() - t0
-    print(f"decode {args.new_tokens} steps: {dt:.3f}s "
-          f"({args.new_tokens * b / dt:.1f} tok/s)")
-    seqs = np.concatenate([np.asarray(t) for t in generated], axis=1)
-    for row in seqs[:4]:
-        print("  ", row.tolist())
+    toks = sum(len(r.output) for r in eng.run())
+    print(f"[{cfg.name}] {len(uids)} requests, {toks} tokens in {dt:.3f}s "
+          f"({toks / dt:.1f} tok/s, {steps} engine steps)")
 
 
 if __name__ == "__main__":

@@ -1,51 +1,41 @@
-"""Host-level batched greedy-decode server.
+"""DEPRECATED wave-batching server — now a thin shim over repro.serve.
 
-Requests queue up with per-request `max_new_tokens` budgets and optional
-EOS ids.  `step()` serves one *wave*: all pending requests whose prompt
-length equals the earliest pending request's (up to `max_batch`), so a
-wave shares one prefill shape and one decode loop.  Budgets inside a
-wave may differ — the wave decodes to the longest budget (right-padding
-the shorter requests' generations), each request's output is then
-truncated to its own budget and at its EOS token (inclusive), and the
-loop exits early once every request in the wave is finished.
+`BatchedServer` keeps its historical API (submit / step / run, one
+equal-prompt-length *wave* per step) but delegates all actual serving to
+the continuous-batching `repro.serve.Engine`: each wave is submitted to
+an engine whose slot capacity is the wave's `plen + budget` rounded up
+to a power of two, so engines (and their prefill/decode compilations)
+are shared across waves — compile count is O(log max_len) instead of
+the old one-jit-per-distinct-`plen + budget` growth of `_prefill_fns`.
 
-Greedy decode is row-independent (no cross-batch ops anywhere in the
-model), so a request served inside a wave produces bit-identical output
-to the same request served alone — batching is semantically inert
-(tests/test_server.py asserts this).
+New code should use `repro.serve.Engine` directly: it admits requests
+into freed slots between decode steps, so long generations no longer
+convoy short ones.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
+import warnings
 from typing import Dict, List, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray
-    max_new_tokens: int
-    eos_id: Optional[int] = None
-    output: Optional[np.ndarray] = None
+from repro.serve.bucketing import bucket_length
+from repro.serve.engine import Engine, Request  # noqa: F401 (re-export)
 
 
 class BatchedServer:
-    """Wave-batching greedy-decode server over one model + params."""
+    """Deprecated wave-batching facade over `repro.serve.Engine`."""
 
     def __init__(self, model, params, max_batch: int = 8):
+        warnings.warn(
+            "repro.dist.server.BatchedServer is deprecated; use "
+            "repro.serve.Engine (continuous batching) instead",
+            DeprecationWarning, stacklevel=2)
         self.model = model
         self.params = params
         self.max_batch = int(max_batch)
         self._queue: List[Request] = []
         self._done: List[Request] = []
         self._next_uid = 0
-        self._prefill_fns: Dict[int, callable] = {}
-        self._decode = jax.jit(self.model.decode_step)
+        self._engines: Dict[int, Engine] = {}   # bucketed capacity -> engine
 
     # ------------------------------------------------------------------
     # request intake
@@ -54,6 +44,7 @@ class BatchedServer:
     def submit(self, prompt, max_new_tokens: int,
                eos_id: Optional[int] = None) -> int:
         """Queue a prompt; returns the request uid."""
+        import numpy as np
         prompt = np.asarray(prompt, np.int32)
         assert prompt.ndim == 1 and prompt.size > 0, prompt.shape
         assert max_new_tokens >= 1, max_new_tokens
@@ -71,12 +62,14 @@ class BatchedServer:
     # serving
     # ------------------------------------------------------------------
 
-    def _prefill(self, cache_len):
-        fn = self._prefill_fns.get(cache_len)
-        if fn is None:
-            fn = jax.jit(partial(self.model.prefill, cache_len=cache_len))
-            self._prefill_fns[cache_len] = fn
-        return fn
+    def _engine(self, capacity: int) -> Engine:
+        cap = bucket_length(capacity)
+        eng = self._engines.get(cap)
+        if eng is None:
+            eng = Engine(self.model, self.params, max_batch=self.max_batch,
+                         max_len=cap)
+            self._engines[cap] = eng
+        return eng
 
     def _take_wave(self) -> List[Request]:
         plen = len(self._queue[0].prompt)
@@ -89,50 +82,20 @@ class BatchedServer:
         self._queue = rest
         return wave
 
-    def _serve_wave(self, wave: List[Request]) -> None:
-        plen = len(wave[0].prompt)
-        budget = max(r.max_new_tokens for r in wave)
-        toks = jnp.asarray(np.stack([r.prompt for r in wave]), jnp.int32)
-
-        logits, caches = self._prefill(plen + budget)(
-            self.params, {"tokens": toks})
-        token = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-        generated = [np.asarray(token)]
-
-        finished = np.array(
-            [r.max_new_tokens == 1
-             or (r.eos_id is not None and int(t) == r.eos_id)
-             for r, t in zip(wave, generated[0][:, 0])], bool)
-        for i in range(1, budget):
-            if finished.all():
-                break
-            logits, caches = self._decode(self.params, token, caches,
-                                          jnp.int32(plen + i - 1))
-            token = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-            generated.append(np.asarray(token))
-            for j, r in enumerate(wave):
-                if finished[j]:
-                    continue
-                t = int(generated[-1][j, 0])
-                if (i + 1 >= r.max_new_tokens
-                        or (r.eos_id is not None and t == r.eos_id)):
-                    finished[j] = True
-
-        seq = np.concatenate(generated, axis=1)        # [b, <=budget]
-        for j, r in enumerate(wave):
-            out = seq[j, : r.max_new_tokens]
-            if r.eos_id is not None:
-                hits = np.nonzero(out == r.eos_id)[0]
-                if hits.size:
-                    out = out[: hits[0] + 1]           # EOS inclusive
-            r.output = np.asarray(out, np.int32)
-
     def step(self) -> List[Request]:
-        """Serve one wave; returns the requests completed by it."""
+        """Serve one wave to completion; returns its requests."""
         if not self._queue:
             return []
         wave = self._take_wave()
-        self._serve_wave(wave)
+        plen = len(wave[0].prompt)
+        budget = max(r.max_new_tokens for r in wave)
+        eng = self._engine(plen + budget)
+        by_uid = {eng.submit(r.prompt, r.max_new_tokens, r.eos_id): r
+                  for r in wave}
+        while eng.pending or eng.num_active:
+            for fin in eng.step():
+                by_uid[fin.uid].output = fin.output
+        eng._done.clear()   # the shim keeps its own _done; don't retain twice
         self._done.extend(wave)
         return wave
 

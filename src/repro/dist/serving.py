@@ -56,3 +56,54 @@ def make_decode_step(model, mesh, token_shapes, cache_shapes):
             model.decode_step(params, token, caches, position),
         in_shardings=(p_sh, t_sh, c_sh, None))
     return fn, (p_sh, t_sh, c_sh)
+
+
+# ---------------------------------------------------------------------------
+# slot-arena (repro.serve continuous batching) on the production mesh
+#
+# The arena's cache leaves are the same stacked [layers, B, T, ...] buffers
+# the wave path shards (slot batch over the data axes, kv-head / latent
+# feature dims over "model"), and the per-row ptr [layers, B] replicates —
+# `cache_shardings` covers both, so the engine runs unchanged on the mesh.
+# ---------------------------------------------------------------------------
+
+
+def make_slot_prefill_step(model, mesh, arena_shapes):
+    """Jitted admission prefill over a slot-sharded arena.
+
+    Returns (jitted prefill(params, tokens, length, slot, caches),
+    (p_sh, c_sh)).  tokens is batch-1 (one admitted request), hence
+    replicated; the arena keeps its decode shardings so admission does
+    not reshuffle the in-flight slots.
+    """
+    p_sh = serve_param_shardings(mesh, _param_shapes(model))
+    c_sh = cache_shardings(mesh, arena_shapes)
+    repl = NamedSharding(mesh, P())
+    fn = jax.jit(
+        lambda params, tokens, length, slot, caches:
+            model.prefill_into_slot(params, tokens, length, slot, caches),
+        in_shardings=(p_sh, repl, repl, repl, c_sh),
+        out_shardings=(repl, c_sh),
+        donate_argnums=(4,))    # update the arena in place
+    return fn, (p_sh, c_sh)
+
+
+def make_decode_rows_step(model, mesh, max_batch, arena_shapes):
+    """Jitted per-row decode step over all arena slots.
+
+    Returns (jitted decode(params, token, caches, positions),
+    (p_sh, t_sh, c_sh)).  token [B,1] shards over the data axes like the
+    wave path; positions [B] replicates (it feeds per-row rope/masking).
+    """
+    p_sh = serve_param_shardings(mesh, _param_shapes(model))
+    t_sh = batch_shardings(
+        mesh, {"token": jax.ShapeDtypeStruct((max_batch, 1), jnp.int32)},
+        batch_axes=data_axes(mesh))["token"]
+    c_sh = cache_shardings(mesh, arena_shapes)
+    fn = jax.jit(
+        lambda params, token, caches, positions:
+            model.decode_rows(params, token, caches, positions),
+        in_shardings=(p_sh, t_sh, c_sh, None),
+        out_shardings=(None, c_sh),
+        donate_argnums=(2,))    # update the arena in place
+    return fn, (p_sh, t_sh, c_sh)

@@ -3,8 +3,13 @@
 Grid: (batch*kv_heads, num_kv_blocks); all G query heads of one kv head
 are processed together as a [G, hd] tile (MXU-friendly when G*hd >= 128).
 The KV length is blocked; running max/sum/accumulator live in scratch —
-flash-decoding within a chip. Length masking supports partially-filled
-ring caches.
+flash-decoding within a chip.
+
+Length masking is per row: `lengths` is an int32 vector [BKV] (one valid
+length per batch*kv-head row, scalar-prefetched into SMEM), so a single
+kernel launch serves a continuous-batching slot arena where every slot
+is at a different decode depth.  The legacy scalar `valid_len` is still
+accepted and broadcast.
 """
 from __future__ import annotations
 
@@ -19,10 +24,12 @@ from jax.experimental.pallas import tpu as pltpu
 _NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-            scale, block_k, seq_k, valid_len):
+def _kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, scale, block_k):
+    bi = pl.program_id(0)
     ki = pl.program_id(1)
     nk = pl.num_programs(1)
+    limit = lengths_ref[bi]
 
     @pl.when(ki == 0)
     def _init():
@@ -34,17 +41,15 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     k = k_ref[0].astype(jnp.float32)             # [bk, hd]
     v = v_ref[0].astype(jnp.float32)
     # zero padded/invalid kv rows (0 * garbage = NaN otherwise)
-    limit_rows = seq_k if valid_len is None else valid_len
     v_rows = ki * block_k + jax.lax.broadcasted_iota(
         jnp.int32, v.shape, 0)
-    v = jnp.where(v_rows < limit_rows, v, 0.0)
+    v = jnp.where(v_rows < limit, v, 0.0)
 
     logits = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32) * scale     # [G, bk]
     kv_idx = ki * block_k + jax.lax.broadcasted_iota(
         jnp.int32, logits.shape, 1)
-    limit = seq_k if valid_len is None else valid_len
     logits = jnp.where(kv_idx < limit, logits, _NEG_INF)
 
     m_prev = m_scr[...]
@@ -64,32 +69,50 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                     / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
 
 
-def decode_attention_grouped(q, k, v, *, scale=None, valid_len=None,
-                             block_k=512, interpret=False):
-    """q: [BKV, G, hd]; k, v: [BKV, T, hd]. Returns [BKV, G, hd]."""
+def decode_attention_grouped(q, k, v, *, scale=None, lengths=None,
+                             valid_len=None, block_k=512, interpret=False):
+    """q: [BKV, G, hd]; k, v: [BKV, T, hd]. Returns [BKV, G, hd].
+
+    lengths: int32 [BKV] per-row valid KV lengths (continuous batching:
+    every slot row is at its own decode depth).  valid_len: legacy scalar
+    length applied to all rows.  Omitting both attends to the full cache.
+    """
     bkv, g, hd = q.shape
     t = k.shape[1]
     scale = scale if scale is not None else float(1.0 / np.sqrt(hd))
     block_k = min(block_k, t)
     grid = (bkv, pl.cdiv(t, block_k))
 
-    kern = functools.partial(_kernel, scale=scale, block_k=block_k,
-                             seq_k=t, valid_len=valid_len)
+    if lengths is None:
+        lengths = jnp.full((bkv,), t if valid_len is None else valid_len,
+                           jnp.int32)
+    else:
+        assert valid_len is None, "pass either lengths or valid_len"
+        lengths = jnp.asarray(lengths, jnp.int32)
+        assert lengths.shape == (bkv,), (lengths.shape, bkv)
 
-    return pl.pallas_call(
-        kern,
+    kern = functools.partial(_kernel, scale=scale, block_k=block_k)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=grid,
+        # index maps take (*grid_indices, *scalar_prefetch_refs)
         in_specs=[
-            pl.BlockSpec((1, g, hd), lambda b, ki: (b, 0, 0)),
-            pl.BlockSpec((1, block_k, hd), lambda b, ki: (b, ki, 0)),
-            pl.BlockSpec((1, block_k, hd), lambda b, ki: (b, ki, 0)),
+            pl.BlockSpec((1, g, hd), lambda b, ki, lens: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, ki, lens: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, ki, lens: (b, ki, 0)),
         ],
-        out_specs=pl.BlockSpec((1, g, hd), lambda b, ki: (b, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((bkv, g, hd), q.dtype),
+        out_specs=pl.BlockSpec((1, g, hd), lambda b, ki, lens: (b, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((g, 1), jnp.float32),
             pltpu.VMEM((g, 1), jnp.float32),
             pltpu.VMEM((g, hd), jnp.float32),
         ],
+    )
+
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bkv, g, hd), q.dtype),
         interpret=interpret,
-    )(q, k, v)
+    )(lengths, q, k, v)

@@ -92,9 +92,12 @@ def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
     return out.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
 
 
-def decode_attention(q, k, v, *, scale=None, valid_len=None, block_k=512,
-                     interpret=None):
-    """q: [B,H,hd]; k, v: [B,T,KV,hd]. Returns [B,H,hd]."""
+def decode_attention(q, k, v, *, scale=None, valid_len=None, lengths=None,
+                     block_k=512, interpret=None):
+    """q: [B,H,hd]; k, v: [B,T,KV,hd]. Returns [B,H,hd].
+
+    lengths: int32 [B] per-row valid KV lengths (slot-arena decode where
+    each batch row is at its own depth); valid_len: legacy scalar."""
     interpret = _interpret_default(interpret)
     b, h, hd = q.shape
     t, kv = k.shape[1], k.shape[2]
@@ -102,9 +105,11 @@ def decode_attention(q, k, v, *, scale=None, valid_len=None, block_k=512,
     qf = q.reshape(b, kv, g, hd).reshape(b * kv, g, hd)
     kf = k.transpose(0, 2, 1, 3).reshape(b * kv, t, hd)
     vf = v.transpose(0, 2, 1, 3).reshape(b * kv, t, hd)
+    if lengths is not None:
+        lengths = jnp.repeat(jnp.asarray(lengths, jnp.int32), kv)
     out = decode_attention_grouped(qf, kf, vf, scale=scale,
-                                   valid_len=valid_len, block_k=block_k,
-                                   interpret=interpret)
+                                   valid_len=valid_len, lengths=lengths,
+                                   block_k=block_k, interpret=interpret)
     return out.reshape(b, kv, g, hd).reshape(b, h, hd)
 
 

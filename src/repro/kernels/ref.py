@@ -43,7 +43,9 @@ def attention(q, k, v, *, causal=True, window=0, scale=None):
 
 
 def decode_attention(q, k, v, *, valid_len=None, scale=None):
-    """q: [B,H,hd]; k,v: [B,KV,T,hd]. Returns [B,H,hd]."""
+    """q: [B,H,hd]; k,v: [B,KV,T,hd]. Returns [B,H,hd].
+
+    valid_len: scalar, or int vector [B] of per-row valid lengths."""
     b, h, hd = q.shape
     kvh, t = k.shape[1], k.shape[2]
     g = h // kvh
@@ -53,7 +55,10 @@ def decode_attention(q, k, v, *, valid_len=None, scale=None):
     logits = jnp.einsum("bhd,bhtd->bht", q.astype(jnp.float32),
                         kq.astype(jnp.float32)) * scale
     if valid_len is not None:
-        logits = jnp.where(jnp.arange(t)[None, None] < valid_len,
+        vl = jnp.asarray(valid_len)
+        if vl.ndim:
+            vl = vl.reshape(-1, 1, 1)
+        logits = jnp.where(jnp.arange(t)[None, None] < vl,
                            logits, -1e30)
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bht,bhtd->bhd", p, vq.astype(jnp.float32))

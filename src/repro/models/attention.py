@@ -191,12 +191,20 @@ def ring_insert(buf, entry, ptr):
     """buf [B,T,...], entry [B,...] -> write at slot ptr % T.
 
     ptr is the running token count, so slot i%T always holds token i —
-    ring eviction drops the oldest cached token.
+    ring eviction drops the oldest cached token.  ptr may be a scalar
+    (all rows at the same depth — the wave/legacy path) or an int vector
+    [B] (slot-arena continuous batching: each row writes at its own
+    per-row position).
     """
     t = buf.shape[1]
-    return jax.lax.dynamic_update_index_in_dim(
-        buf, entry[:, None].astype(buf.dtype), ptr % t, axis=1
-    ).reshape(buf.shape)
+    if jnp.ndim(ptr) == 0:
+        return jax.lax.dynamic_update_index_in_dim(
+            buf, entry[:, None].astype(buf.dtype), ptr % t, axis=1
+        ).reshape(buf.shape)
+    return jax.vmap(
+        lambda row, e, p: jax.lax.dynamic_update_index_in_dim(
+            row, e[None].astype(row.dtype), p % t, axis=0)
+    )(buf, entry, ptr).reshape(buf.shape)
 
 
 def prefill_cache_entries(seq_entries, capacity, s):
@@ -220,6 +228,9 @@ def gqa_decode(params, cfg, x, cache, position, window=0):
 
     Inserts the new token's K/V first, then attends over all valid slots
     (so the token attends to itself); returns ([B,1,D], new cache).
+    ptr (and position) may be scalar or per-row [B] — the latter is the
+    slot-arena continuous-batching path where every row decodes at its
+    own depth.
     """
     del window
     b = x.shape[0]
@@ -235,8 +246,8 @@ def gqa_decode(params, cfg, x, cache, position, window=0):
 
     logits = jnp.einsum("bkgh,btkh->bkgt", q.astype(jnp.float32),
                         ck.astype(jnp.float32)) * float(1.0 / np.sqrt(hd))
-    valid = jnp.arange(t) < num_valid
-    logits = jnp.where(valid[None, None, None], logits, _NEG_INF)
+    valid = jnp.arange(t) < jnp.reshape(num_valid, (-1, 1))  # [1|B, T]
+    logits = jnp.where(valid[:, None, None, :], logits, _NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgt,btkh->bkgh", p, cv.astype(jnp.float32))
     out = out.reshape(b, 1, h * hd).astype(x.dtype)
@@ -313,6 +324,7 @@ def mla_decode(params, cfg, x, cache, position):
     cache: {ckv [B,T,r], kpe [B,T,rope], ptr}. Inserts the new token's
     latents, then attends over valid slots; per head the nope logits are
     (q_nope W_kb^T) . c_kv — O(r) per position, never materializing K/V.
+    ptr/position may be scalar or per-row [B] (slot-arena decode).
     Returns ([B,1,D], new cache).
     """
     m = cfg.mla
@@ -336,8 +348,8 @@ def mla_decode(params, cfg, x, cache, position):
                          ckv.astype(jnp.float32))
               + jnp.einsum("bxhd,btd->bht", q_pe.astype(jnp.float32),
                            kpe.astype(jnp.float32))) * scale
-    valid = jnp.arange(t) < num_valid
-    logits = jnp.where(valid[None, None], logits, _NEG_INF)
+    valid = jnp.arange(t) < jnp.reshape(num_valid, (-1, 1))  # [1|B, T]
+    logits = jnp.where(valid[:, None, :], logits, _NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)
     ctx = jnp.einsum("bht,btr->bhr", p, ckv.astype(jnp.float32))
     wv_b = params["wv_b"].reshape(m.kv_lora_rank, h, m.v_head_dim)

@@ -27,6 +27,11 @@ class Model:
     prefill: Callable        # (params, batch) -> (logits, caches)
     decode_step: Callable    # (params, token, caches, position) -> (logits, caches)
     init_cache: Callable     # (batch, seq_len, window) -> caches
+    # slot-arena continuous-batching entry points (repro.serve); None for
+    # families without them (encoder-decoder).
+    init_arena: Callable = None         # (slots, capacity, dtype) -> arena
+    prefill_into_slot: Callable = None  # (params, tokens, length, slot, arena)
+    decode_rows: Callable = None        # (params, token, arena, positions)
 
 
 def build_model(cfg: ArchConfig, window: int = 0) -> Model:
@@ -49,6 +54,13 @@ def build_model(cfg: ArchConfig, window: int = 0) -> Model:
                                                         window=window),
         init_cache=lambda batch, seq, win=window: TF.init_cache(
             cfg, batch, seq, window=win),
+        init_arena=lambda slots, capacity, **kw: TF.init_arena(
+            cfg, slots, capacity, window=window, **kw),
+        prefill_into_slot=lambda p, tokens, length, slot, caches:
+            TF.prefill_into_slot(cfg, p, tokens, length, slot, caches,
+                                 window=window),
+        decode_rows=lambda p, t, c, pos: TF.decode_rows(cfg, p, t, c, pos,
+                                                        window=window),
     )
 
 

@@ -352,3 +352,91 @@ def decode_step(cfg, params, token, caches, position, window=0):
                            mode="decode", caches=caches, window=window)
     logits = logits_fn(cfg, params, x).astype(jnp.float32)
     return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# slot-arena entry points (repro.serve continuous batching)
+#
+# The arena holds `slots` independent in-flight requests in one cache
+# pytree: array leaves are the usual stacked [layers, B, T, ...] buffers,
+# but `ptr` is per-row int32 [layers, B] so every slot decodes at its own
+# depth.  Admission prefills ONE request (batch-1 forward) and writes the
+# resulting cache row into its slot between decode steps; the decode step
+# is a single jitted function over all slots with per-row positions.
+# ---------------------------------------------------------------------------
+
+
+def _leaf_name(path):
+    for k in reversed(path):
+        if hasattr(k, "key"):
+            return k.key
+    return None
+
+
+def init_arena(cfg, slots, capacity, window=0, dtype=jnp.bfloat16):
+    """Slot-arena caches: init_cache with per-row ptr [layers, slots]."""
+    caches = init_cache(cfg, slots, capacity, window=window, dtype=dtype)
+    return jax.tree_util.tree_map_with_path(
+        lambda p, a: (jnp.zeros(a.shape + (slots,), jnp.int32)
+                      if _leaf_name(p) == "ptr" else a),
+        caches)
+
+
+def _write_slot(arena, row, slot, length):
+    """Write a batch-1 cache `row` into arena slot `slot` (traced index);
+    the slot's ptr is set to `length` (tokens actually in the cache)."""
+    def upd(path, a, r):
+        if _leaf_name(path) == "ptr":
+            return a.at[:, slot].set(jnp.asarray(length, a.dtype))
+        return jax.lax.dynamic_update_slice_in_dim(
+            a, r.astype(a.dtype), slot, axis=1)
+    return jax.tree_util.tree_map_with_path(upd, arena, row)
+
+
+def prefill_into_slot(cfg, params, tokens, length, slot, caches, window=0):
+    """Admit one request into arena slot `slot` between decode steps.
+
+    tokens: [1, Sp] int32, right-padded to a bucketed length Sp (pad
+    entries are masked out downstream: causal attention means positions
+    < length never see them, and the slot's ptr/validity is `length`).
+    length: true prompt length (traced scalar — no recompile per length).
+    slot: arena row to overwrite (traced scalar).
+    caches: arena from init_arena (leaves [layers, B, T, ...], ptr
+    [layers, B]).
+
+    Returns (logits [1,1,V] at position length-1, updated arena).
+    """
+    params = _cast(cfg, params)
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.compute_dtype))
+    _, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (1, s))
+    # batch-1 cache row with the arena's per-segment capacities/dtypes
+    row = jax.tree_util.tree_map_with_path(
+        lambda p, a: (jnp.zeros(a.shape[:1], jnp.int32)
+                      if _leaf_name(p) == "ptr"
+                      else jnp.zeros((a.shape[0], 1) + a.shape[2:], a.dtype)),
+        caches)
+    x, row, _ = forward(cfg, params, x, positions=positions, mode="prefill",
+                        caches=row, window=window)
+    h_last = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
+    logits = logits_fn(cfg, params, h_last).astype(jnp.float32)
+    return logits, _write_slot(caches, row, slot, length)
+
+
+def decode_rows(cfg, params, token, caches, positions, window=0):
+    """One decode step over all arena slots.
+
+    token: [B,1] int32 (one current token per slot); positions: int32 [B]
+    absolute positions (== tokens already in each slot's cache).  Dead
+    slots compute garbage that the engine masks host-side; their cache
+    rows are fully overwritten at the next admission.
+
+    Returns (logits [B,1,V], new caches)."""
+    params = _cast(cfg, params)
+    x = embed(params["embed"], token).astype(jnp.dtype(cfg.compute_dtype))
+    b = x.shape[0]
+    positions = jnp.reshape(jnp.asarray(positions, jnp.int32), (b, 1))
+    x, caches, _ = forward(cfg, params, x, positions=positions,
+                           mode="decode", caches=caches, window=window)
+    logits = logits_fn(cfg, params, x).astype(jnp.float32)
+    return logits, caches

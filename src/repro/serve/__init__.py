@@ -1,0 +1,9 @@
+"""repro.serve — slot-based continuous-batching serving engine.
+
+Replaces the wave-batching API (`repro.dist.server.BatchedServer`, now a
+deprecation shim over this engine): a fixed slot arena of KV caches, one
+persistent jitted decode step over all slots, and an admission scheduler
+that prefills queued requests into freed slots between decode steps.
+"""
+from repro.serve.bucketing import bucket_length, num_buckets  # noqa: F401
+from repro.serve.engine import Engine, Request  # noqa: F401

@@ -1,0 +1,28 @@
+"""Power-of-two length bucketing for serving-side jit shapes.
+
+jit compiles once per distinct shape, so serving raw request lengths
+compiles without bound (one prefill per distinct prompt length, one
+cache per distinct `plen + budget`).  Rounding every length up to a
+power of two (pad + mask) bounds the compile count at O(log max_len).
+
+Cache-capacity bucketing is always inert (extra capacity only delays
+ring eviction).  Prompt padding is inert only for pure attention
+stacks with full-capacity rings: padded positions are causally
+invisible and masked out of decode by the per-slot validity length.
+The engine prefills at exact lengths otherwise — recurrent layers fold
+padding into their state, moe capacity dropping depends on the static
+sequence length, and sliding-window rings would let pads evict real
+context.
+"""
+from __future__ import annotations
+
+
+def bucket_length(n: int, floor: int = 1) -> int:
+    """Smallest power of two >= max(n, floor)."""
+    n = max(int(n), int(floor), 1)
+    return 1 << (n - 1).bit_length()
+
+
+def num_buckets(max_len: int, floor: int = 1) -> int:
+    """How many distinct buckets lengths in [1, max_len] can map to."""
+    return len({bucket_length(n, floor) for n in range(1, max_len + 1)})

@@ -1,0 +1,261 @@
+"""Slot-based continuous-batching serving engine.
+
+The paper's core argument (arXiv 2202.03263) is that asynchrony wins
+wall-clock time: fast participants proceed instead of convoying behind
+slow ones.  Wave batching violates that on the serving side — a wave
+decodes until its *longest* generation finishes, so one long request
+convoys every short one.  This engine is the serving-side analogue of
+API-BCD's asynchrony:
+
+  * a fixed **slot arena** of `max_batch` KV-cache rows with per-row
+    write pointers/validity lengths (capacity bucketed to a power of
+    two),
+  * ONE persistent jitted decode step over all slots — dead slots are
+    masked host-side and recycled, so there are no recompiles as the
+    batch composition churns,
+  * an **admission scheduler** that prefills a queued request into any
+    freed slot *between* decode steps (batch-1 prefill, prompt length
+    bucketed to a power of two) while the other slots keep decoding.
+
+Greedy decode is row-independent (no cross-batch ops in the model), so
+a request admitted into a half-full decode batch produces bit-identical
+output to the same request served alone — batching and admission timing
+are semantically inert (tests/test_server.py asserts this).
+
+Generations are bounded by the slot capacity (`plen + max_new_tokens <=
+max_len`); paged KV for longer-than-slot generations is the recorded
+follow-up (ROADMAP).
+"""
+from __future__ import annotations
+
+import dataclasses
+import weakref
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.bucketing import bucket_length
+
+_PREFILL_FLOOR = 8      # smallest prompt bucket (keeps compile count tiny)
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    output: Optional[np.ndarray] = None
+
+
+# One jit wrapper per (model, entry point): engines over the same model
+# share traces/executables, so a fresh Engine (e.g. one per cache bucket
+# in the BatchedServer shim) costs no recompilation.  Weakly keyed by
+# the Model so wrappers + executables die with it (the model's entry
+# lambdas close over cfg, not the Model, so no cycle pins the key).
+_JIT_CACHE = weakref.WeakKeyDictionary()
+
+
+def _shared_jit(model, name, donate_argnums=()):
+    per_model = _JIT_CACHE.setdefault(model, {})
+    key = (name, donate_argnums)
+    if key not in per_model:
+        per_model[key] = jax.jit(getattr(model, name),
+                                 donate_argnums=donate_argnums)
+    return per_model[key]
+
+
+class Engine:
+    """Continuous-batching greedy-decode engine over one model + params.
+
+    API: submit(prompt, max_new_tokens, eos_id) -> uid;
+    step() -> requests finished by this step; run() -> drain the queue.
+    """
+
+    def __init__(self, model, params, *, max_batch: int = 8,
+                 max_len: int = 256, cache_dtype=jnp.bfloat16, mesh=None):
+        if model.prefill_into_slot is None:
+            raise NotImplementedError(
+                f"family {model.cfg.family!r} has no slot-arena entry points")
+        self.model = model
+        self.params = params
+        self.max_batch = int(max_batch)
+        self.capacity = bucket_length(max_len)
+        # prompt padding is only inert for pure attention stacks: the
+        # recurrent kinds (rwkv/rglru) fold padding into their state,
+        # and moe layers drop tokens by a capacity computed from the
+        # static sequence length, so padding changes routing.  Those
+        # prefill at exact prompt lengths (compile per length, as the
+        # wave server always did).
+        self._pad_prompts = all(t == "attn" for t in model.cfg.layer_types)
+        self.prefill_shapes: set = set()    # admitted Sp values (observability)
+
+        # padding is also NOT inert when any attention ring is smaller
+        # than the padded length: prefill keeps the last `ring` entries,
+        # so pad tokens would evict real context and then be counted
+        # valid.  Sliding-window models (cfg.attn_window or a window
+        # override baked into the model) therefore prefill at exact
+        # lengths; detect them from the arena's ring capacities.
+        arena_shapes = jax.eval_shape(
+            lambda: model.init_arena(self.max_batch, self.capacity,
+                                     dtype=cache_dtype))
+        self._pad_prompts &= self._min_ring(arena_shapes) >= self.capacity
+
+        # donation avoids a full arena copy per step; CPU jax only warns,
+        # so gate it on the backend.
+        donate = jax.default_backend() != "cpu"
+        if mesh is not None:
+            from repro.dist.serving import (make_decode_rows_step,
+                                            make_slot_prefill_step)
+            self._prefill, (_, c_sh) = make_slot_prefill_step(
+                model, mesh, arena_shapes)
+            self._decode, _ = make_decode_rows_step(
+                model, mesh, self.max_batch, arena_shapes)
+            self._caches = jax.device_put(
+                model.init_arena(self.max_batch, self.capacity,
+                                 dtype=cache_dtype), c_sh)
+        else:
+            self._prefill = _shared_jit(model, "prefill_into_slot",
+                                        donate_argnums=(4,) if donate else ())
+            self._decode = _shared_jit(model, "decode_rows",
+                                       donate_argnums=(2,) if donate else ())
+            self._caches = model.init_arena(self.max_batch, self.capacity,
+                                            dtype=cache_dtype)
+
+        self._queue: List[Request] = []
+        self._done: List[Request] = []
+        self._next_uid = 0
+        self._slot_req: List[Optional[Request]] = [None] * self.max_batch
+        self._gen: List[List[int]] = [[] for _ in range(self.max_batch)]
+        self._lengths = np.zeros(self.max_batch, np.int64)  # tokens in cache
+        self._cur = np.zeros(self.max_batch, np.int64)      # current token
+
+    @staticmethod
+    def _min_ring(arena_shapes):
+        """Smallest ring-buffer capacity across attention cache leaves
+        ([layers, B, T, ...]); inf when the model has none."""
+        caps = []
+
+        def visit(path, leaf):
+            name = None
+            for k in reversed(path):
+                if hasattr(k, "key"):
+                    name = k.key
+                    break
+            if name in ("k", "v", "ckv", "kpe"):
+                caps.append(leaf.shape[2])
+            return leaf
+
+        jax.tree_util.tree_map_with_path(visit, arena_shapes)
+        return min(caps) if caps else float("inf")
+
+    # ------------------------------------------------------------------
+    # request intake
+    # ------------------------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int,
+               eos_id: Optional[int] = None) -> int:
+        """Queue a token-id prompt; returns the request uid.
+
+        Prompts are token-only: a VLM served through the engine runs
+        text-only (no patch prefix) — multimodal admission inputs are a
+        follow-up; use model.prefill directly for patched prompts."""
+        prompt = np.asarray(prompt, np.int32)
+        assert prompt.ndim == 1 and prompt.size > 0, prompt.shape
+        assert max_new_tokens >= 1, max_new_tokens
+        if len(prompt) + max_new_tokens > self.capacity:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens})"
+                f" exceeds slot capacity {self.capacity}; paged KV for"
+                " longer-than-slot generations is a recorded follow-up")
+        uid = self._next_uid
+        self._next_uid += 1
+        self._queue.append(Request(uid, prompt, int(max_new_tokens),
+                                   None if eos_id is None else int(eos_id)))
+        return uid
+
+    @property
+    def pending(self) -> int:
+        """Queued requests not yet admitted to a slot."""
+        return len(self._queue)
+
+    @property
+    def num_active(self) -> int:
+        """Requests currently decoding in the arena."""
+        return sum(r is not None for r in self._slot_req)
+
+    # ------------------------------------------------------------------
+    # serving
+    # ------------------------------------------------------------------
+
+    def _admit(self, req: Request, slot: int) -> Optional[Request]:
+        """Prefill `req` into `slot`; returns it if it finished already
+        (budget 1 or EOS on the first token)."""
+        plen = len(req.prompt)
+        if self._pad_prompts:
+            sp = min(bucket_length(plen, _PREFILL_FLOOR), self.capacity)
+        else:
+            sp = plen
+        self.prefill_shapes.add(sp)
+        toks = np.zeros((1, sp), np.int32)
+        toks[0, :plen] = req.prompt
+        logits, self._caches = self._prefill(
+            self.params, jnp.asarray(toks), jnp.int32(plen), jnp.int32(slot),
+            self._caches)
+        tok = int(np.asarray(jnp.argmax(logits[0, -1])))
+        self._slot_req[slot] = req
+        self._gen[slot] = [tok]
+        self._lengths[slot] = plen
+        self._cur[slot] = tok
+        if (req.max_new_tokens == 1
+                or (req.eos_id is not None and tok == req.eos_id)):
+            return self._finish(slot)
+        return None
+
+    def _finish(self, slot: int) -> Request:
+        req = self._slot_req[slot]
+        req.output = np.asarray(self._gen[slot], np.int32)
+        self._slot_req[slot] = None
+        self._gen[slot] = []
+        self._done.append(req)
+        return req
+
+    def step(self) -> List[Request]:
+        """Admit queued requests into free slots, then run ONE decode
+        step over the arena; returns the requests finished by this step."""
+        finished: List[Request] = []
+        for slot in range(self.max_batch):
+            while self._slot_req[slot] is None and self._queue:
+                f = self._admit(self._queue.pop(0), slot)
+                if f is not None:
+                    finished.append(f)
+
+        active = [s for s in range(self.max_batch)
+                  if self._slot_req[s] is not None]
+        if not active:
+            return finished
+
+        tokens = jnp.asarray(self._cur.reshape(-1, 1).astype(np.int32))
+        positions = jnp.asarray(self._lengths.astype(np.int32))
+        logits, self._caches = self._decode(self.params, tokens,
+                                            self._caches, positions)
+        nxt = np.asarray(jnp.argmax(logits[:, -1], -1)).astype(np.int32)
+        for s in active:
+            self._lengths[s] += 1
+            tok = int(nxt[s])
+            self._gen[s].append(tok)
+            self._cur[s] = tok
+            req = self._slot_req[s]
+            if (len(self._gen[s]) >= req.max_new_tokens
+                    or (req.eos_id is not None and tok == req.eos_id)):
+                finished.append(self._finish(s))
+        return finished
+
+    def run(self) -> List[Request]:
+        """Drain queue + arena; returns every request completed so far
+        (accumulating across earlier step() calls)."""
+        while self._queue or self.num_active:
+            self.step()
+        return list(self._done)

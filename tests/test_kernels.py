@@ -110,6 +110,31 @@ def test_decode_attention(t, h, kv, hd, valid, dtype):
                                np.asarray(want, np.float32), **TOL[dtype])
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_per_row_lengths(dtype):
+    """Slot-arena decode: every batch row attends to its own valid KV
+    length (one kernel launch over slots at different decode depths)."""
+    rng = np.random.default_rng(8)
+    b, t, h, kv, hd = 3, 384, 4, 2, 64
+    q = _rand(rng, (b, h, hd), dtype)
+    k = _rand(rng, (b, t, kv, hd), dtype)
+    v = _rand(rng, (b, t, kv, hd), dtype)
+    lengths = jnp.asarray([1, 200, 384], jnp.int32)
+    out = ops.decode_attention(q, k, v, lengths=lengths, block_k=128,
+                               interpret=True)
+    want = ref.decode_attention(q, k.transpose(0, 2, 1, 3),
+                                v.transpose(0, 2, 1, 3), valid_len=lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+    # each row matches a solo scalar-length call (per-row masking exact)
+    for i, n in enumerate([1, 200, 384]):
+        solo = ops.decode_attention(q[i:i + 1], k[i:i + 1], v[i:i + 1],
+                                    valid_len=n, block_k=128, interpret=True)
+        np.testing.assert_allclose(np.asarray(solo[0], np.float32),
+                                   np.asarray(out[i], np.float32),
+                                   **TOL[dtype])
+
+
 # ---------------------------------------------------------------------------
 # rwkv6
 # ---------------------------------------------------------------------------

@@ -1,12 +1,20 @@
-"""Batched-serving loop tests (wave batching, padding, EOS, budgets)."""
+"""Serving tests: the continuous-batching slot engine (repro.serve) and
+the deprecated wave-batching shim kept on top of it (BatchedServer)."""
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from proptest import property_sweep
 from repro.configs import get_smoke
-from repro.dist.server import BatchedServer
 from repro.models import build_model
+from repro.serve import Engine, bucket_length, num_buckets
+
+with warnings.catch_warnings():
+    warnings.simplefilter("ignore", DeprecationWarning)
+    from repro.dist.server import BatchedServer
 
 
 @pytest.fixture(scope="module")
@@ -77,3 +85,236 @@ def test_eos_truncates(served):
     srv.submit(prompt, max_new_tokens=10, eos_id=first_tok)
     out = srv.run()[0].output
     assert out[-1] == first_tok and len(out) <= 10
+
+
+# ---------------------------------------------------------------------------
+# continuous-batching engine (repro.serve.Engine)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_continuous_drains_mixed_lengths(served):
+    """Mixed prompt lengths AND budgets drain in one engine — no waves."""
+    cfg, model, params = served
+    eng = Engine(model, params, max_batch=3, max_len=32)
+    rng = np.random.default_rng(10)
+    uids = [eng.submit(rng.integers(0, cfg.vocab_size, (int(n),)),
+                       max_new_tokens=int(b))
+            for n, b in ((4, 2), (7, 9), (5, 1), (6, 4), (3, 6))]
+    done = eng.run()
+    assert eng.pending == 0 and eng.num_active == 0
+    assert sorted(r.uid for r in done) == sorted(uids)
+    for r in done:
+        assert r.output is not None and 1 <= len(r.output) <= r.max_new_tokens
+        assert (r.output >= 0).all() and (r.output < cfg.vocab_size).all()
+
+
+def test_engine_mixed_admission_bit_identity(served):
+    """A request admitted into a half-full decode batch (another slot is
+    mid-generation) produces bit-identical tokens to the same request
+    served alone — admission timing is semantically inert."""
+    cfg, model, params = served
+    rng = np.random.default_rng(11)
+    long_p = rng.integers(0, cfg.vocab_size, (6,))
+    short_p = rng.integers(0, cfg.vocab_size, (5,))
+
+    ref = Engine(model, params, max_batch=2, max_len=32)
+    ref.submit(short_p, max_new_tokens=5)
+    want_short = ref.run()[0].output
+    ref2 = Engine(model, params, max_batch=2, max_len=32)
+    ref2.submit(long_p, max_new_tokens=12)
+    want_long = ref2.run()[0].output
+
+    eng = Engine(model, params, max_batch=2, max_len=32)
+    uid_long = eng.submit(long_p, max_new_tokens=12)
+    for _ in range(4):                      # long request is mid-decode...
+        eng.step()
+    assert eng.num_active == 1
+    uid_short = eng.submit(short_p, max_new_tokens=5)   # ...then admit
+    outs = {r.uid: r.output for r in eng.run()}
+    np.testing.assert_array_equal(outs[uid_short], want_short)
+    np.testing.assert_array_equal(outs[uid_long], want_long)
+
+
+@property_sweep(num_cases=4, base_seed=100)
+def test_engine_slot_reuse_never_leaks(rng):
+    """Property: a slot freed by one request and reused by another must
+    not leak KV state — output on a reused arena == output on a fresh
+    arena, for random prompts/budgets."""
+    cfg, model, params = _SHARED["served"]
+    eng = _SHARED["reused_engine"]          # slots reused across cases
+    plen = int(rng.integers(2, 11))
+    budget = int(rng.integers(1, 7))
+    prompt = rng.integers(0, cfg.vocab_size, (plen,))
+    # keep both slots busy so reuse interleaves with live decodes
+    eng.submit(rng.integers(0, cfg.vocab_size, (int(rng.integers(2, 9)),)),
+               max_new_tokens=int(rng.integers(1, 7)))
+    uid = eng.submit(prompt, max_new_tokens=budget)
+    outs = {r.uid: r.output for r in eng.run()}
+
+    fresh = Engine(model, params, max_batch=2, max_len=32)
+    fresh.submit(prompt, max_new_tokens=budget)
+    np.testing.assert_array_equal(outs[uid], fresh.run()[0].output)
+
+
+_SHARED = {}
+
+
+@pytest.fixture(autouse=True)
+def _shared_engine(served):
+    if "served" not in _SHARED:
+        _SHARED["served"] = served
+        _SHARED["reused_engine"] = Engine(served[1], served[2],
+                                          max_batch=2, max_len=32)
+    yield
+
+
+def test_engine_eos_truncates(served):
+    cfg, model, params = served
+    rng = np.random.default_rng(12)
+    prompt = rng.integers(0, cfg.vocab_size, (6,))
+    probe = Engine(model, params, max_batch=1, max_len=32)
+    probe.submit(prompt, max_new_tokens=3)
+    first_tok = int(probe.run()[0].output[0])
+
+    eng = Engine(model, params, max_batch=1, max_len=32)
+    eng.submit(prompt, max_new_tokens=10, eos_id=first_tok)
+    out = eng.run()[0].output
+    assert out[-1] == first_tok and len(out) <= 10
+
+
+def test_engine_rejects_longer_than_slot(served):
+    cfg, model, params = served
+    eng = Engine(model, params, max_batch=1, max_len=16)
+    with pytest.raises(ValueError, match="slot capacity"):
+        eng.submit(np.arange(10, dtype=np.int32) % cfg.vocab_size,
+                   max_new_tokens=20)
+
+
+def test_bucketing_bounds_compiles(served):
+    """Distinct plen+budget combos collapse into O(log max_len) buckets:
+    the shim keeps ONE engine for caps 9..12 (all bucket to 16), and the
+    engine's admitted prefill shapes are powers of two."""
+    cfg, model, params = served
+    assert [bucket_length(n) for n in (3, 8, 9, 16, 17)] == [4, 8, 16, 16, 32]
+    assert num_buckets(32) == 6                 # {1, 2, 4, 8, 16, 32}
+    assert num_buckets(1024, floor=8) == 8      # O(log max_len)
+    rng = np.random.default_rng(13)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        srv = BatchedServer(model, params, max_batch=2)
+    for plen, budget in ((4, 5), (5, 5), (6, 6), (7, 5)):   # caps 9..12
+        srv.submit(rng.integers(0, cfg.vocab_size, (plen,)), budget)
+    srv.run()
+    assert list(srv._engines) == [16]
+    (eng,) = srv._engines.values()
+    assert eng.prefill_shapes <= {8, 16}    # pow2 prompt buckets only
+
+
+# ---------------------------------------------------------------------------
+# engine over other cache families: MLA (absorbed latent cache) and
+# recurrent state (rwkv; exact-length prefill, no padding)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["deepseek-v2-236b", "rwkv6-1.6b"])
+def test_engine_other_families_bit_identical(arch):
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(14)
+    a = rng.integers(0, cfg.vocab_size, (5,))
+    b = rng.integers(0, cfg.vocab_size, (7,))
+
+    ref = Engine(model, params, max_batch=2, max_len=32)
+    ref.submit(a, max_new_tokens=4)
+    want = ref.run()[0].output
+
+    eng = Engine(model, params, max_batch=2, max_len=32)
+    eng.submit(b, max_new_tokens=8)
+    eng.step()
+    eng.step()
+    uid = eng.submit(a, max_new_tokens=4)   # admitted mid-flight
+    outs = {r.uid: r.output for r in eng.run()}
+    np.testing.assert_array_equal(outs[uid], want)
+    # neither family may pad prompts: recurrent state folds padding in,
+    # and moe capacity dropping depends on the static sequence length
+    assert eng.prefill_shapes == {5, 7}
+
+
+def test_engine_on_production_mesh_subprocess():
+    """Engine(mesh=...) serves on a ("data", "model") mesh via the
+    slot-arena sharding specs; mid-flight admission stays bit-identical
+    to a same-mesh engine serving the request alone (subprocess: needs
+    4 forced host devices)."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env.pop("JAX_PLATFORMS", None)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    code = r"""
+import sys
+sys.path.insert(0, "src")
+import numpy as np, jax
+from jax.sharding import Mesh
+from repro.configs.base import ArchConfig
+from repro.models import build_model
+from repro.serve import Engine
+
+cfg = ArchConfig(name="t", family="dense", source="test", num_layers=2,
+                 d_model=128, num_heads=4, num_kv_heads=2, head_dim=32,
+                 d_ff=256, vocab_size=512, tie_embeddings=True)
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+mesh = Mesh(np.array(jax.devices()).reshape(2, 2), ("data", "model"))
+rng = np.random.default_rng(0)
+a = rng.integers(0, cfg.vocab_size, (5,))
+b = rng.integers(0, cfg.vocab_size, (7,))
+
+ref = Engine(model, params, max_batch=2, max_len=32, mesh=mesh)
+ref.submit(a, max_new_tokens=4)
+want = ref.run()[0].output
+
+eng = Engine(model, params, max_batch=2, max_len=32, mesh=mesh)
+eng.submit(b, max_new_tokens=8)
+eng.step(); eng.step()
+uid = eng.submit(a, max_new_tokens=4)
+outs = {r.uid: r.output for r in eng.run()}
+np.testing.assert_array_equal(outs[uid], want)
+print("MESH_ENGINE_OK")
+"""
+    res = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900,
+                         cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert "MESH_ENGINE_OK" in res.stdout, res.stdout + res.stderr
+
+
+def test_engine_sliding_window_exact_prefill():
+    """A model with an attention ring smaller than the slot capacity
+    must prefill at exact prompt lengths: pow2 padding would evict real
+    context from the windowed ring and count the pad slots valid.  The
+    engine output must match the raw prefill/decode loop."""
+    from functools import partial
+    cfg = get_smoke("qwen2-0.5b")
+    model = build_model(cfg, window=16)
+    params = model.init(jax.random.PRNGKey(2))
+    rng = np.random.default_rng(15)
+    plen, budget = 20, 4
+    prompt = rng.integers(0, cfg.vocab_size, (plen,))
+
+    eng = Engine(model, params, max_batch=2, max_len=32)
+    assert not eng._pad_prompts          # ring 16 < capacity 32
+    uid = eng.submit(prompt, max_new_tokens=budget)
+    out = {r.uid: r.output for r in eng.run()}[uid]
+
+    prefill = jax.jit(partial(model.prefill, cache_len=plen + budget))
+    decode = jax.jit(model.decode_step)
+    logits, caches = prefill(params, {"tokens": jnp.asarray(prompt[None])})
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    want = [int(tok[0, 0])]
+    for i in range(1, budget):
+        logits, caches = decode(params, tok, caches, jnp.int32(plen + i - 1))
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        want.append(int(tok[0, 0]))
+    np.testing.assert_array_equal(out, np.asarray(want, np.int32))
