@@ -1,8 +1,14 @@
 """Serving benchmark: wave batching vs slot-arena continuous batching on
 a mixed-length workload, written to BENCH_serving.json.
 
-    PYTHONPATH=src python benchmarks/bench_serving.py [--quick] \
+    PYTHONPATH=src python benchmarks/bench_serving.py [--quick] [--paged] \
         [--out BENCH_serving.json]
+
+--paged adds a paged-KV arm on a long-generation workload the arena
+CANNOT admit (every request has plen + budget > slot capacity, but fits
+the shared block pool): it proves the blocks/tables/chunked-prefill
+path end-to-end and records its throughput/latency alongside the
+scheduler comparison.
 
 Workload: all prompts share one length (so the wave scheduler batches
 maximally — the comparison isolates *scheduling*, not shapes), budgets
@@ -83,6 +89,36 @@ def serve_best(make_srv, reqs, repeats):
     return min(runs, key=lambda r: r["latency_p99_s"])
 
 
+def bench_paged(model, params, cfg, args, max_len):
+    """Long-generation arm: every request exceeds the slot capacity
+    (arena submit raises), the paged pool admits and completes them."""
+    requests = 4 if args.quick else 8
+    plen = 8
+    budget = max_len  # plen + budget > capacity by construction
+    reqs = [(np.random.default_rng(i).integers(0, cfg.vocab_size, (plen,)),
+             budget) for i in range(requests)]
+
+    arena = Engine(model, params, max_batch=args.max_batch, max_len=max_len)
+    try:
+        arena.submit(reqs[0][0], max_new_tokens=budget)
+        rejected = False
+    except ValueError:
+        rejected = True
+
+    def make_paged():
+        return Engine(model, params, max_batch=args.max_batch,
+                      max_len=max_len, paged=True, block_size=16)
+    warm = make_paged()
+    warm.submit(reqs[0][0], max_new_tokens=2)
+    warm.run()
+    r = serve_best(make_paged, reqs, args.repeats)
+    r["workload"] = {"requests": requests, "prompt_len": plen,
+                     "budget": budget, "slot_capacity": max_len,
+                     "arena_rejects": rejected}
+    r["completed_all"] = (r["tokens"] == requests * budget)
+    return r
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_serving.json")
@@ -90,7 +126,11 @@ def main():
                     help="CPU CI mode: smaller workload")
     ap.add_argument("--check", action="store_true",
                     help="exit nonzero unless continuous is strictly "
-                         "better on p99 at >= throughput")
+                         "better on p99 at >= throughput (and, with "
+                         "--paged, the paged arm completes a workload "
+                         "the arena rejects)")
+    ap.add_argument("--paged", action="store_true",
+                    help="add the paged-KV long-generation arm")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--repeats", type=int, default=3,
                     help="timed runs per scheduler; best (min p99) kept")
@@ -132,7 +172,12 @@ def main():
         "p99_speedup": round(p99_speedup, 2),
         "throughput_ratio": round(throughput_ratio, 2),
     }
-    for k in ("wave", "continuous"):
+    if args.paged:
+        results["paged_long"] = bench_paged(model, params, cfg, args,
+                                            max_len)
+    for k in ("wave", "continuous", "paged_long"):
+        if k not in results:
+            continue
         r = results[k]
         print(f"{k:11s}: {r['throughput_tok_s']:8.1f} tok/s   "
               f"p50 {r['latency_p50_s']:.3f}s   p99 {r['latency_p99_s']:.3f}s")
@@ -149,6 +194,12 @@ def main():
         print("FAIL: continuous batching is not strictly better on p99 "
               "at >= throughput")
         sys.exit(1)
+    if args.check and args.paged:
+        pl = results["paged_long"]
+        if not (pl["completed_all"] and pl["workload"]["arena_rejects"]):
+            print("FAIL: paged arm must fully serve a workload the slot "
+                  "arena rejects")
+            sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.dist.sharding import (batch_shardings, cache_shardings,
-                                 greedy_spec)
+                                 greedy_spec, pool_shardings)
 
 
 def data_axes(mesh):
@@ -106,4 +106,59 @@ def make_decode_rows_step(model, mesh, max_batch, arena_shapes):
         in_shardings=(p_sh, t_sh, c_sh, None),
         out_shardings=(None, c_sh),
         donate_argnums=(2,))    # update the arena in place
+    return fn, (p_sh, t_sh, c_sh)
+
+
+# ---------------------------------------------------------------------------
+# paged KV (block-pool) serving on the production mesh
+#
+# The pool's block dim is replicated over the data axes (block tables
+# gather arbitrary blocks each step; sharding blocks would shuffle
+# cross-device) while kv-head / latent feature dims shard over "model" —
+# `pool_shardings`.  Block tables and per-row lengths are small int32
+# host state and replicate.  `Engine(mesh=..., paged=True)` consumes
+# these builders and otherwise runs unchanged.
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_chunk_step(model, mesh, pool_shapes):
+    """Jitted chunked-prefill admission over the shared block pool.
+
+    Returns (jitted prefill(params, tokens, length, ctx_len, table,
+    pool), (p_sh, c_sh)).  tokens is one batch-1 chunk (replicated);
+    the pool keeps its decode shardings so admission does not reshuffle
+    blocks other slots are decoding from.
+    """
+    p_sh = serve_param_shardings(mesh, _param_shapes(model))
+    c_sh = pool_shardings(mesh, pool_shapes)
+    repl = NamedSharding(mesh, P())
+    fn = jax.jit(
+        lambda params, tokens, length, ctx_len, table, pool:
+            model.prefill_chunk_into_blocks(params, tokens, length, ctx_len,
+                                            table, pool),
+        in_shardings=(p_sh, repl, repl, repl, repl, c_sh),
+        out_shardings=(repl, c_sh),
+        donate_argnums=(5,))    # update the pool in place
+    return fn, (p_sh, c_sh)
+
+
+def make_decode_rows_paged_step(model, mesh, max_batch, pool_shapes):
+    """Jitted per-row decode step against the shared block pool.
+
+    Returns (jitted decode(params, token, pool, tables, lengths),
+    (p_sh, t_sh, c_sh)).  token [B,1] shards over the data axes; the
+    [B, W] block tables and [B] lengths replicate (they steer gathers
+    into the replicated block dim).
+    """
+    p_sh = serve_param_shardings(mesh, _param_shapes(model))
+    t_sh = batch_shardings(
+        mesh, {"token": jax.ShapeDtypeStruct((max_batch, 1), jnp.int32)},
+        batch_axes=data_axes(mesh))["token"]
+    c_sh = pool_shardings(mesh, pool_shapes)
+    fn = jax.jit(
+        lambda params, token, pool, tables, lengths:
+            model.decode_rows_paged(params, token, pool, tables, lengths),
+        in_shardings=(p_sh, t_sh, c_sh, None, None),
+        out_shardings=(None, c_sh),
+        donate_argnums=(2,))    # update the pool in place
     return fn, (p_sh, t_sh, c_sh)

@@ -18,6 +18,9 @@ Concrete sharding trees built on top of it:
   train_batch_shardings — [A, B, ...] batches: ("agent", "replica").
   cache_shardings       — stacked KV caches: batch over data axes,
                           kv-head / latent dims over "model".
+  pool_shardings        — paged KV block pools: blocks replicated over
+                          the data axes (tables gather across blocks),
+                          kv-head / latent dims over "model".
 """
 from __future__ import annotations
 
@@ -54,6 +57,14 @@ def greedy_spec(shape, axis_sizes, skip_leading=0) -> P:
 
 def _mesh_axes(mesh, names):
     return {a: mesh.shape[a] for a in names if a in mesh.shape}
+
+
+def _leaf_name(path):
+    """Last dict key on a tree path (None for positional-only paths)."""
+    for k in reversed(path):
+        if hasattr(k, "key"):
+            return k.key
+    return None
 
 
 def _prod(xs):
@@ -158,11 +169,7 @@ def cache_shardings(mesh, cache_shapes):
     model = mesh.shape.get("model", 1)
 
     def spec_for(path, leaf):
-        name = None
-        for k in reversed(path):
-            if hasattr(k, "key"):
-                name = k.key
-                break
+        name = _leaf_name(path)
         if leaf.ndim <= 1 or name == "ptr":
             return P()
         entries = [None] * leaf.ndim
@@ -178,3 +185,31 @@ def cache_shardings(mesh, cache_shapes):
 
     return jax.tree_util.tree_map_with_path(
         lambda p, leaf: NamedSharding(mesh, spec_for(p, leaf)), cache_shapes)
+
+
+def pool_shardings(mesh, pool_shapes):
+    """Shardings for paged KV block pools (leaves [layers, NB, bs, ...]).
+
+    Block tables index arbitrary blocks each step, so the block dim
+    stays replicated over the data axes (sharding it would turn every
+    gather into a cross-device shuffle); the per-entry kv-head
+    ([layers, NB, bs, KV, hd] k/v) or latent feature dim
+    ([layers, NB, bs, r] ckv / kpe) shards over "model" when it
+    divides — the paged decode kernel then runs on the local shard,
+    exactly like the arena's cache_shardings.
+    """
+    model = mesh.shape.get("model", 1)
+
+    def spec_for(path, leaf):
+        name = _leaf_name(path)
+        entries = [None] * leaf.ndim
+        if (name in ("k", "v") and leaf.ndim >= 5 and model > 1
+                and leaf.shape[3] % model == 0):
+            entries[3] = "model"            # kv-head axis
+        elif (name in ("ckv", "kpe") and leaf.ndim >= 4 and model > 1
+                and leaf.shape[3] % model == 0):
+            entries[3] = "model"            # latent feature axis
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, leaf: NamedSharding(mesh, spec_for(p, leaf)), pool_shapes)

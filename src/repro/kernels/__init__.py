@@ -8,7 +8,9 @@ pure-jnp oracles in ref.py via interpret mode on CPU):
   * flash_attention  — blockwise online-softmax attention (GQA, causal,
                        sliding window); scores never leave VMEM.
   * decode_attention — single-token GQA attention over a long KV cache,
-                       KV-length-blocked with running max/sum merge.
+                       KV-length-blocked with running max/sum merge; the
+                       paged variant DMAs blocks of a shared KV pool via
+                       scalar-prefetched per-row block tables.
   * rwkv6_scan       — RWKV6 data-dependent-decay WKV recurrence,
                        time-chunked with on-chip [dk, dv] state.
   * rglru_scan       — RG-LRU gated linear recurrence, time-chunked.

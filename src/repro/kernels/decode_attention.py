@@ -10,6 +10,13 @@ length per batch*kv-head row, scalar-prefetched into SMEM), so a single
 kernel launch serves a continuous-batching slot arena where every slot
 is at a different decode depth.  The legacy scalar `valid_len` is still
 accepted and broadcast.
+
+`decode_attention_paged_grouped` is the block-table variant for the
+paged KV pool: K/V live in a shared pool of fixed-size blocks
+([num_blocks, block_size, hd] per kv head) and each row's scalar-
+prefetched block-table slice steers the BlockSpec index_map, so the
+kernel DMAs exactly the row's blocks out of HBM — the gather IS the
+grid, no linearized copy is ever materialized.
 """
 from __future__ import annotations
 
@@ -116,3 +123,110 @@ def decode_attention_grouped(q, k, v, *, scale=None, lengths=None,
         out_shape=jax.ShapeDtypeStruct((bkv, g, hd), q.dtype),
         interpret=interpret,
     )(lengths, q, k, v)
+
+
+def _paged_kernel(lengths_ref, tables_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale, block_size):
+    """Same online-softmax accumulation as `_kernel`, but the kv block
+    for grid step (r, bi) was DMA'd via the block table (see in_specs),
+    so the valid-position mask compares against logical positions
+    bi * block_size + i rather than physical pool offsets."""
+    r = pl.program_id(0)
+    bi = pl.program_id(1)
+    nb = pl.num_programs(1)
+    limit = lengths_ref[r]
+
+    @pl.when(bi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)             # [G, hd]
+    k = k_ref[0, :, 0].astype(jnp.float32)       # [bs, hd]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    # zero invalid kv rows (0 * garbage = NaN otherwise); rows of an
+    # unallocated (null) block are fully masked by `limit`
+    v_rows = bi * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, v.shape, 0)
+    v = jnp.where(v_rows < limit, v, 0.0)
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale     # [G, bs]
+    kv_idx = bi * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, logits.shape, 1)
+    logits = jnp.where(kv_idx < limit, logits, _NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, logits.max(axis=1, keepdims=True))
+    p = jnp.exp(logits - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = (acc_scr[...] * corr
+                    + jax.lax.dot_general(
+                        p, v, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+
+    @pl.when(bi == nb - 1)
+    def _emit():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_paged_grouped(q, k_pool, v_pool, block_tables, lengths,
+                                   *, scale=None, interpret=False):
+    """Block-table decode attention against a shared paged KV pool.
+
+    q: [BKV, G, hd]; k_pool, v_pool: [NB, block_size, KV, hd] (the shared
+    pool — NB counts the null block 0); block_tables: int32 [BKV, W]
+    physical block ids per row; lengths: int32 [BKV] valid logical
+    lengths.  Row r's logical position p lives in pool block
+    block_tables[r, p // bs] at offset p % bs.  Returns [BKV, G, hd].
+
+    The tables are scalar-prefetched and consumed by the K/V BlockSpec
+    index_maps: grid step (r, bi) DMAs pool block block_tables[r, bi]
+    for kv head r % KV — flash-decoding straight out of the paged pool.
+    """
+    bkv, g, hd = q.shape
+    nb_pool, block_size, kv = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    w = block_tables.shape[1]
+    scale = scale if scale is not None else float(1.0 / np.sqrt(hd))
+    lengths = jnp.asarray(lengths, jnp.int32)
+    block_tables = jnp.asarray(block_tables, jnp.int32)
+    assert lengths.shape == (bkv,), (lengths.shape, bkv)
+    assert block_tables.shape == (bkv, w), (block_tables.shape, bkv, w)
+
+    kern = functools.partial(_paged_kernel, scale=scale,
+                             block_size=block_size)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bkv, w),
+        # index maps take (*grid_indices, *scalar_prefetch_refs); the
+        # pool's kv-head dim is selected per row (r % KV), the block id
+        # comes from the prefetched table
+        in_specs=[
+            pl.BlockSpec((1, g, hd), lambda r, bi, lens, tabs: (r, 0, 0)),
+            pl.BlockSpec((1, block_size, 1, hd),
+                         lambda r, bi, lens, tabs: (tabs[r, bi], 0,
+                                                    r % kv, 0)),
+            pl.BlockSpec((1, block_size, 1, hd),
+                         lambda r, bi, lens, tabs: (tabs[r, bi], 0,
+                                                    r % kv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, hd), lambda r, bi, lens, tabs: (r, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bkv, g, hd), q.dtype),
+        interpret=interpret,
+    )(lengths, block_tables, q, k_pool, v_pool)

@@ -11,7 +11,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention import decode_attention_grouped
+from repro.kernels.decode_attention import (decode_attention_grouped,
+                                            decode_attention_paged_grouped)
 from repro.kernels.flash_attention import flash_attention_bhsd
 from repro.kernels.prox_update import LANE, prox_update_2d
 from repro.kernels.rglru_scan import rglru_scan_bsw
@@ -110,6 +111,27 @@ def decode_attention(q, k, v, *, scale=None, valid_len=None, lengths=None,
     out = decode_attention_grouped(qf, kf, vf, scale=scale,
                                    valid_len=valid_len, lengths=lengths,
                                    block_k=block_k, interpret=interpret)
+    return out.reshape(b, kv, g, hd).reshape(b, h, hd)
+
+
+def decode_attention_paged(q, k_pool, v_pool, block_tables, lengths, *,
+                           scale=None, interpret=None):
+    """q: [B,H,hd]; k_pool, v_pool: [NB, bs, KV, hd] (shared paged pool);
+    block_tables: int32 [B, W]; lengths: int32 [B].  Returns [B,H,hd].
+
+    The paged analogue of `decode_attention`: row b's KV lives in pool
+    blocks block_tables[b] and only positions < lengths[b] are valid.
+    Tables/lengths are repeated per kv head for the [B*KV] kernel grid.
+    """
+    interpret = _interpret_default(interpret)
+    b, h, hd = q.shape
+    kv = k_pool.shape[2]
+    g = h // kv
+    qf = q.reshape(b, kv, g, hd).reshape(b * kv, g, hd)
+    tables = jnp.repeat(jnp.asarray(block_tables, jnp.int32), kv, axis=0)
+    lens = jnp.repeat(jnp.asarray(lengths, jnp.int32), kv)
+    out = decode_attention_paged_grouped(qf, k_pool, v_pool, tables, lens,
+                                         scale=scale, interpret=interpret)
     return out.reshape(b, kv, g, hd).reshape(b, h, hd)
 
 

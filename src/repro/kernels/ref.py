@@ -65,6 +65,25 @@ def decode_attention(q, k, v, *, valid_len=None, scale=None):
     return out.astype(q.dtype)
 
 
+def decode_attention_paged(q, k_pool, v_pool, block_tables, lengths, *,
+                           scale=None):
+    """Paged-oracle: gather each row's blocks into a linear cache, then
+    run the linear decode oracle with per-row valid lengths.
+
+    q: [B,H,hd]; k_pool, v_pool: [NB, bs, KV, hd]; block_tables: int32
+    [B, W]; lengths: int32 [B].  Returns [B,H,hd]."""
+    b, w = block_tables.shape
+    bs = k_pool.shape[1]
+
+    def linearize(pool):
+        g = pool[block_tables]                      # [B, W, bs, KV, hd]
+        g = g.reshape(b, w * bs, pool.shape[2], pool.shape[3])
+        return g.transpose(0, 2, 1, 3)              # [B, KV, T, hd]
+
+    return decode_attention(q, linearize(k_pool), linearize(v_pool),
+                            valid_len=lengths, scale=scale)
+
+
 def rwkv6(r, k, v, w, u, state=None):
     """RWKV6 WKV recurrence. r,k,v,w: [B,H,S,hd]; u: [H,hd].
 

@@ -12,6 +12,9 @@ A/B the schedulers on the same workload:
                    shim) — long generations convoy short ones
     --mixed        interleave short/long budgets so the convoy effect
                    is visible in the latency spread
+    --paged        paged-KV backend: shared block pool, per-slot block
+                   tables, chunked prefill (admission against free
+                   blocks instead of full-length slots)
 
 Encoder-decoder families (whisper) and VLMs (whose prompts carry a
 patch prefix the engine's token-only submit cannot express yet) keep a
@@ -87,6 +90,13 @@ def main():
                       help="slot-arena continuous batching (default)")
     mode.add_argument("--wave", dest="mode", action="store_const",
                       const="wave", help="deprecated wave batching")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV: shared block pool + block tables + "
+                         "chunked prefill (continuous mode only; "
+                         "auto-falls back to the arena for families "
+                         "that cannot page)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged KV block size in tokens")
     args = ap.parse_args()
 
     if args.devices:
@@ -123,7 +133,11 @@ def main():
 
     if args.mode == "continuous":
         srv = Engine(model, params, max_batch=args.max_batch,
-                     max_len=max_len)
+                     max_len=max_len, paged=args.paged,
+                     block_size=args.block_size)
+        if args.paged and not srv.paged:
+            print(f"[{cfg.name}] cannot page this family; using the "
+                  "slot arena")
     else:
         with warnings.catch_warnings():
             warnings.simplefilter("ignore", DeprecationWarning)

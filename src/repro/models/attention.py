@@ -256,6 +256,141 @@ def gqa_decode(params, cfg, x, cache, position, window=0):
 
 
 # ---------------------------------------------------------------------------
+# paged KV (block-pool) attention
+#
+# The pool stores KV in fixed-size blocks ([num_blocks + 1, block_size, ...]
+# per layer; block 0 is the never-attended null block) and a per-slot block
+# table maps logical position p to physical entry (table[p // bs], p % bs).
+# The slot arena is the degenerate case of one contiguous block per slot:
+# GQA and MLA decode/prefill math below is identical to the arena path, so
+# the two modes are bit-compatible (tests assert token-level identity).
+# ---------------------------------------------------------------------------
+
+
+def gather_pages(pool, table):
+    """pool [NB, bs, ...]; table int32 [B, W] -> linear [B, W * bs, ...].
+
+    Position p of row b lands at index p: logical order is preserved, so
+    the gathered buffer is exactly the arena row the block table encodes
+    (unallocated entries gather the null block and are masked by the
+    caller's validity length)."""
+    b, w = table.shape
+    g = pool[table]                             # [B, W, bs, ...]
+    return g.reshape((b, w * pool.shape[1]) + pool.shape[2:])
+
+
+def scatter_chunk_pages(pool, entries, table, start):
+    """Write a prefill chunk's entries into one slot's blocks.
+
+    pool [NB, bs, ...]; entries [C, ...]; table int32 [W]; start = traced
+    absolute position of entries[0].  Positions past the table's range
+    are routed to the null block 0 (the engine sizes tables so only the
+    padded chunk tail can land there; pad entries written into real
+    blocks are inert — they sit beyond the slot's validity length and
+    are overwritten by decode before ever becoming valid)."""
+    bs, w = pool.shape[1], table.shape[0]
+    c = entries.shape[0]
+    p = start + jnp.arange(c)
+    bi = p // bs
+    in_range = bi < w
+    blk = jnp.where(in_range, table[jnp.minimum(bi, w - 1)], 0)
+    return pool.at[blk, p % bs].set(entries.astype(pool.dtype))
+
+
+def scatter_token_pages(pool, entries, tables, positions):
+    """Per-row single-token write: entries [B, ...] at positions[b].
+
+    tables int32 [B, W].  Dead rows (engine: zeroed table + position 0)
+    write the null block; live rows write distinct allocated blocks, so
+    the batched scatter has no cross-row collisions that matter."""
+    bs = pool.shape[1]
+    blk = jnp.take_along_axis(tables, (positions // bs)[:, None], 1)[:, 0]
+    return pool.at[blk, positions % bs].set(entries.astype(pool.dtype))
+
+
+def _paged_context_attention(q, k_ctx, v_ctx, k_new, v_new, ctx_len, scale):
+    """Chunk queries vs (gathered context ++ the chunk's own K/V).
+
+    q [B,C,KV,G,hd]; k_ctx/v_ctx [B,T,KV,hd*]; k_new/v_new [B,C,KV,hd*].
+    Context keys are valid below ctx_len; chunk keys are causally masked
+    within the chunk (padded tail keys sit above every valid query, so
+    the causal mask already hides them).  Returns [B,C,KV,G,hd_v]."""
+    t = k_ctx.shape[1]
+    c = q.shape[1]
+    qf = q.astype(jnp.float32)
+    ctx_logits = jnp.einsum("bskgh,btkh->bskgt", qf,
+                            k_ctx.astype(jnp.float32)) * scale
+    ctx_valid = jnp.arange(t) < ctx_len                       # [T]
+    ctx_logits = jnp.where(ctx_valid[None, None, None, None, :],
+                           ctx_logits, _NEG_INF)
+    self_logits = jnp.einsum("bskgh,btkh->bskgt", qf,
+                             k_new.astype(jnp.float32)) * scale
+    causal = jnp.arange(c)[:, None] >= jnp.arange(c)[None, :]  # [C, C]
+    self_logits = jnp.where(causal[None, :, None, None, :],
+                            self_logits, _NEG_INF)
+    logits = jnp.concatenate([ctx_logits, self_logits], axis=-1)
+    p = jax.nn.softmax(logits, axis=-1)
+    v_all = jnp.concatenate([v_ctx, v_new], axis=1).astype(jnp.float32)
+    return jnp.einsum("bskgt,btkh->bskgh", p, v_all)
+
+
+def gqa_prefill_paged(params, cfg, x, cache, table, ctx_len):
+    """One prefill chunk against a paged pool (batch-1 admission).
+
+    x [1,C,D]; cache {k, v: [NB, bs, KV, hd]}; table int32 [W]; ctx_len =
+    tokens already in the slot's blocks.  Attends chunk queries to the
+    gathered context plus the chunk itself (insert-then-attend, same
+    semantics as the arena prefill), scatters the chunk's K/V into the
+    slot's blocks.  Returns ([1,C,D], new cache)."""
+    b, c, _ = x.shape
+    h, hd = cfg.num_heads, cfg.head_dim
+    positions = ctx_len + jnp.broadcast_to(jnp.arange(c)[None], (b, c))
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+    k_ctx = gather_pages(cache["k"], table[None])
+    v_ctx = gather_pages(cache["v"], table[None])
+    out = _paged_context_attention(q, k_ctx, v_ctx, k_new, v_new, ctx_len,
+                                   float(1.0 / np.sqrt(hd)))
+    out = out.reshape(b, c, h * hd).astype(x.dtype)
+    new_cache = {
+        "k": scatter_chunk_pages(cache["k"], k_new[0], table, ctx_len),
+        "v": scatter_chunk_pages(cache["v"], v_new[0], table, ctx_len),
+    }
+    return out @ params["wo"], new_cache
+
+
+def gqa_decode_paged(params, cfg, x, cache, tables, lengths):
+    """Per-row decode against a paged pool.
+
+    x [B,1,D]; cache {k, v: [NB, bs, KV, hd]}; tables int32 [B, W];
+    lengths int32 [B] = tokens already cached per row (== the absolute
+    position of the incoming token).  Inserts the new token's K/V at
+    position lengths[b], then attends over the gathered valid entries —
+    the same insert-then-attend masked softmax as the arena's
+    `gqa_decode`.  Returns ([B,1,D], new cache)."""
+    b = x.shape[0]
+    h, hd = cfg.num_heads, cfg.head_dim
+    pos = jnp.reshape(lengths, (b, 1))
+    q, k_new, v_new = _project_qkv(params, cfg, x, pos)
+    q = q[:, 0]                                   # [B,KV,G,hd]
+
+    ck = scatter_token_pages(cache["k"], k_new[:, 0], tables, lengths)
+    cv = scatter_token_pages(cache["v"], v_new[:, 0], tables, lengths)
+    kf = gather_pages(ck, tables)                 # [B, T, KV, hd]
+    vf = gather_pages(cv, tables)
+    t = kf.shape[1]
+    num_valid = lengths + 1
+
+    logits = jnp.einsum("bkgh,btkh->bkgt", q.astype(jnp.float32),
+                        kf.astype(jnp.float32)) * float(1.0 / np.sqrt(hd))
+    valid = jnp.arange(t) < jnp.reshape(num_valid, (-1, 1))   # [B, T]
+    logits = jnp.where(valid[:, None, None, :], logits, _NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", p, vf.astype(jnp.float32))
+    out = out.reshape(b, 1, h * hd).astype(x.dtype)
+    return out @ params["wo"], {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
 # MLA (DeepSeek-V2 multi-head latent attention)
 # ---------------------------------------------------------------------------
 
@@ -357,6 +492,89 @@ def mla_decode(params, cfg, x, cache, position):
     out = out.reshape(b, 1, h * m.v_head_dim).astype(x.dtype)
     new_cache = {"ckv": ckv, "kpe": kpe, "ptr": cache["ptr"] + 1}
     return out @ params["wo"], new_cache
+
+
+def mla_prefill_paged(params, cfg, x, cache, table, ctx_len):
+    """One MLA prefill chunk against a paged latent pool (batch-1).
+
+    cache {ckv: [NB, bs, r], kpe: [NB, bs, rope]} stores the compressed
+    latents (kpe post-rope, as the arena does).  Context K/V are
+    reconstructed from the gathered latents via wk_b/wv_b — the same
+    non-absorbed math as `mla_prefill` — then the chunk attends to
+    context ++ itself and its latents are scattered into the blocks."""
+    m = cfg.mla
+    b, c, _ = x.shape
+    h = cfg.num_heads
+    positions = ctx_len + jnp.broadcast_to(jnp.arange(c)[None], (b, c))
+    q_nope, q_pe = _mla_q(params, cfg, x, positions)
+    new_ckv, new_kpe = _mla_ckv(params, cfg, x, positions)
+
+    ckv_ctx = gather_pages(cache["ckv"], table[None])   # [1, T, r]
+    kpe_ctx = gather_pages(cache["kpe"], table[None])   # [1, T, rope]
+    t = ckv_ctx.shape[1]
+
+    def expand(ckv, kpe, s):
+        # same dtype discipline as mla_prefill: reconstruct K/V in the
+        # compute dtype; the attention core casts to f32 for the logits
+        ckv = ckv.astype(x.dtype)
+        k_nope = (ckv @ params["wk_b"]).reshape(b, s, h, m.qk_nope_head_dim)
+        v = (ckv @ params["wv_b"]).reshape(b, s, h, m.v_head_dim)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kpe[:, :, None, :].astype(k_nope.dtype),
+                                      (b, s, h, m.qk_rope_head_dim))], -1)
+        return k, v
+
+    k_ctx, v_ctx = expand(ckv_ctx, kpe_ctx, t)
+    k_new, v_new = expand(new_ckv, new_kpe, c)
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)        # [1,C,H,qk]
+    qk = q.shape[-1]
+    out = _paged_context_attention(
+        q.reshape(b, c, h, 1, qk), k_ctx, v_ctx, k_new, v_new, ctx_len,
+        float(1.0 / np.sqrt(qk)))
+    out = out.reshape(b, c, h * m.v_head_dim).astype(x.dtype)
+    new_cache = {
+        "ckv": scatter_chunk_pages(cache["ckv"], new_ckv[0], table, ctx_len),
+        "kpe": scatter_chunk_pages(cache["kpe"], new_kpe[0], table, ctx_len),
+    }
+    return out @ params["wo"], new_cache
+
+
+def mla_decode_paged(params, cfg, x, cache, tables, lengths):
+    """Absorbed MLA decode against a paged latent pool.
+
+    Identical math to `mla_decode` (latent-space attention, O(r) per
+    position) with the linear cache replaced by a block-table gather;
+    inserts the incoming token's latents at position lengths[b] first.
+    Returns ([B,1,D], new cache)."""
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.num_heads
+    pos = jnp.reshape(lengths, (b, 1))
+    q_nope, q_pe = _mla_q(params, cfg, x, pos)          # [B,1,H,*]
+    new_ckv, new_kpe = _mla_ckv(params, cfg, x, pos)
+
+    cc = scatter_token_pages(cache["ckv"], new_ckv[:, 0], tables, lengths)
+    cp = scatter_token_pages(cache["kpe"], new_kpe[:, 0], tables, lengths)
+    ckv = gather_pages(cc, tables)                      # [B, T, r]
+    kpe = gather_pages(cp, tables)
+    t = ckv.shape[1]
+    num_valid = lengths + 1
+
+    wk_b = params["wk_b"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bxhd,rhd->bhr", q_nope.astype(jnp.float32),
+                       wk_b.astype(jnp.float32))
+    scale = float(1.0 / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim))
+    logits = (jnp.einsum("bhr,btr->bht", q_lat, ckv.astype(jnp.float32))
+              + jnp.einsum("bxhd,btd->bht", q_pe.astype(jnp.float32),
+                           kpe.astype(jnp.float32))) * scale
+    valid = jnp.arange(t) < jnp.reshape(num_valid, (-1, 1))   # [B, T]
+    logits = jnp.where(valid[:, None, :], logits, _NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bht,btr->bhr", p, ckv.astype(jnp.float32))
+    wv_b = params["wv_b"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bhr,rhd->bhd", ctx, wv_b.astype(jnp.float32))
+    out = out.reshape(b, 1, h * m.v_head_dim).astype(x.dtype)
+    return out @ params["wo"], {"ckv": cc, "kpe": cp}
 
 
 # ---------------------------------------------------------------------------

@@ -32,6 +32,14 @@ class Model:
     init_arena: Callable = None         # (slots, capacity, dtype) -> arena
     prefill_into_slot: Callable = None  # (params, tokens, length, slot, arena)
     decode_rows: Callable = None        # (params, token, arena, positions)
+    # paged-KV (block-pool) entry points; None for families that cannot
+    # page (encoder-decoder, recurrent state, sliding-window rings — the
+    # engine auto-selects the arena for those).
+    init_pool: Callable = None          # (num_blocks, block_size, dtype)
+    prefill_chunk_into_blocks: Callable = None  # (params, tokens, length,
+                                                #  ctx_len, table, pool)
+    decode_rows_paged: Callable = None  # (params, token, pool, tables,
+                                        #  lengths)
 
 
 def build_model(cfg: ArchConfig, window: int = 0) -> Model:
@@ -61,6 +69,13 @@ def build_model(cfg: ArchConfig, window: int = 0) -> Model:
                                  window=window),
         decode_rows=lambda p, t, c, pos: TF.decode_rows(cfg, p, t, c, pos,
                                                         window=window),
+        init_pool=lambda num_blocks, block_size, **kw: TF.init_pool(
+            cfg, num_blocks, block_size, window=window, **kw),
+        prefill_chunk_into_blocks=lambda p, tokens, length, ctx, table, pool:
+            TF.prefill_chunk_into_blocks(cfg, p, tokens, length, ctx,
+                                         table, pool),
+        decode_rows_paged=lambda p, t, pool, tables, lengths:
+            TF.decode_rows_paged(cfg, p, t, pool, tables, lengths),
     )
 
 

@@ -93,14 +93,31 @@ _ring_insert = ring_insert   # back-compat alias
 
 
 def block_apply(cfg, kind, params, x, *, positions, mode, cache=None,
-                window=0):
-    """Returns (x_out, new_cache, aux). aux = scalar (moe load-balance)."""
+                window=0, paged=None):
+    """Returns (x_out, new_cache, aux). aux = scalar (moe load-balance).
+
+    paged: None for the arena/linear cache paths; otherwise a dict that
+    routes attention through the block-pool variants — for prefill
+    {"table": [W], "ctx_len": scalar}, for decode {"tables": [B, W],
+    "lengths": [B]} — with `cache` holding the layer's pool leaves."""
     _, norm = make_norm(cfg.norm_type)
     aux = jnp.zeros((), jnp.float32)
 
     if kind in ("attn", "moe"):
         h = norm(params["ln1"], x)
-        if mode in ("train", "prefill"):
+        if paged is not None:
+            if mode == "prefill":
+                fn = (A.mla_prefill_paged if cfg.mla is not None
+                      else A.gqa_prefill_paged)
+                attn_out, new_cache = fn(params["attn"], cfg, h, cache,
+                                         paged["table"], paged["ctx_len"])
+            else:
+                fn = (A.mla_decode_paged if cfg.mla is not None
+                      else A.gqa_decode_paged)
+                attn_out, new_cache = fn(params["attn"], cfg, h, cache,
+                                         paged["tables"], paged["lengths"])
+            x = x + attn_out
+        elif mode in ("train", "prefill"):
             if cfg.mla is not None:
                 attn_out, (ckv, kpe) = A.mla_prefill(params["attn"], cfg, h,
                                                      positions)
@@ -225,7 +242,7 @@ def init_cache(cfg, batch, seq_len, window=0, dtype=jnp.bfloat16):
 
 
 def _segment_apply(cfg, kind, seg_params, x, *, positions, mode,
-                   seg_cache=None, window=0, remat=False):
+                   seg_cache=None, window=0, remat=False, paged=None):
     """Scan one homogeneous run of `count` layers."""
 
     def body(carry, inp):
@@ -238,7 +255,8 @@ def _segment_apply(cfg, kind, seg_params, x, *, positions, mode,
 
         def blk(p, h):
             return block_apply(cfg, kind, p, h, positions=positions,
-                               mode=mode, cache=c_layer, window=window)
+                               mode=mode, cache=c_layer, window=window,
+                               paged=paged)
 
         if remat and mode == "train":
             blk = jax.checkpoint(blk)   # activation checkpointing per block
@@ -251,7 +269,7 @@ def _segment_apply(cfg, kind, seg_params, x, *, positions, mode,
 
 
 def forward(cfg, params, x, *, positions, mode, caches=None, window=0,
-            remat=False):
+            remat=False, paged=None):
     """Run the full stack on embeddings x. Returns (x, new_caches, aux)."""
     segs = build_segments(cfg.layer_types)
     new_caches = []
@@ -261,7 +279,7 @@ def forward(cfg, params, x, *, positions, mode, caches=None, window=0,
         x, nc, aux = _segment_apply(cfg, kind, params["segments"][si], x,
                                     positions=positions, mode=mode,
                                     seg_cache=seg_cache, window=window,
-                                    remat=remat)
+                                    remat=remat, paged=paged)
         new_caches.append(nc)
         aux_total = aux_total + aux
     _, norm = make_norm(cfg.norm_type)
@@ -440,3 +458,97 @@ def decode_rows(cfg, params, token, caches, positions, window=0):
                            mode="decode", caches=caches, window=window)
     logits = logits_fn(cfg, params, x).astype(jnp.float32)
     return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# paged-KV entry points (repro.serve block-pool continuous batching)
+#
+# The arena above dedicates a full capacity-T cache row to every slot; the
+# paged pool instead shares `num_blocks` fixed-size blocks across all slots
+# ([layers, num_blocks + 1, block_size, ...] per segment leaf — block 0 is
+# the null block unallocated table entries point at) with host-side block
+# tables mapping logical position p -> (table[p // bs], p % bs).  The
+# arena is the degenerate 1-contiguous-block-per-slot case: attention math
+# is identical, only the storage indirection differs.  Long prompts stream
+# in through `prefill_chunk_into_blocks` (fixed-size chunks, one compile)
+# instead of one padded batch-1 launch.  Only pure attention stacks
+# (GQA / MLA, full causal) are paged — recurrent state has no pages, a
+# sliding-window ring relies on eviction (which pages never do), and
+# moe expert capacity depends on the static chunk length (chunking
+# would change routing); the engine auto-selects the arena for those.
+# ---------------------------------------------------------------------------
+
+
+def init_pool(cfg, num_blocks, block_size, window=0, dtype=jnp.bfloat16):
+    """Shared paged-KV block pool; leaves [layers, num_blocks + 1, bs, ...].
+
+    Block 0 is the reserved null block (never attended; masked writes are
+    routed into it), so allocatable ids are 1..num_blocks."""
+    if any(t != "attn" for t in cfg.layer_types):
+        # moe is excluded on purpose, not just recurrent kinds: chunked
+        # prefill would change expert capacity (it depends on the static
+        # chunk length), silently breaking bit-identity with the
+        # unchunked prefill
+        raise NotImplementedError(
+            f"paged KV needs a pure attention stack, got "
+            f"{set(cfg.layer_types)} ({cfg.name})")
+    if window or cfg.attn_window:
+        raise NotImplementedError(
+            "paged KV is full-causal only: a sliding-window ring relies on "
+            "eviction, which pages never do (use the slot arena)")
+    segs = build_segments(cfg.layer_types)
+    pools = []
+    for kind, count in segs:
+        one = init_cache_layer(cfg, kind, num_blocks + 1, block_size, dtype)
+        one = {k: v for k, v in one.items() if k != "ptr"}   # tables rule
+        pools.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (count,) + a.shape), one))
+    return pools
+
+
+def prefill_chunk_into_blocks(cfg, params, tokens, length, ctx_len,
+                              block_table, pool):
+    """Stream one prompt chunk into a slot's blocks (batch-1 admission).
+
+    tokens: [1, C] int32, the next chunk right-padded to the fixed chunk
+    size C (pads are causally invisible to valid positions and their
+    writes land beyond the slot's validity length, so they are inert).
+    length: valid tokens in this chunk (traced scalar).
+    ctx_len: tokens already streamed into the slot's blocks (traced).
+    block_table: int32 [W] physical block ids for this slot (traced
+    values, static W — no recompile as tables change).
+    pool: from init_pool.
+
+    Returns (logits [1,1,V] at chunk position length-1 — only meaningful
+    for the final chunk — and the updated pool)."""
+    params = _cast(cfg, params)
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.compute_dtype))
+    _, c, _ = x.shape
+    positions = ctx_len + jnp.broadcast_to(jnp.arange(c)[None], (1, c))
+    x, pool, _ = forward(cfg, params, x, positions=positions, mode="prefill",
+                         caches=pool,
+                         paged={"table": block_table, "ctx_len": ctx_len})
+    h_last = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
+    logits = logits_fn(cfg, params, h_last).astype(jnp.float32)
+    return logits, pool
+
+
+def decode_rows_paged(cfg, params, token, pool, block_tables, lengths):
+    """One decode step over all slots against the shared block pool.
+
+    token: [B,1] int32; block_tables: int32 [B, W]; lengths: int32 [B]
+    tokens already cached per row (the incoming token's position).  Dead
+    rows carry a zeroed table + length 0: they read/write only the null
+    block and the engine masks their logits host-side.
+
+    Returns (logits [B,1,V], new pool)."""
+    params = _cast(cfg, params)
+    x = embed(params["embed"], token).astype(jnp.dtype(cfg.compute_dtype))
+    b = x.shape[0]
+    lengths = jnp.reshape(jnp.asarray(lengths, jnp.int32), (b,))
+    positions = jnp.reshape(lengths, (b, 1))
+    x, pool, _ = forward(cfg, params, x, positions=positions, mode="decode",
+                         caches=pool,
+                         paged={"tables": block_tables, "lengths": lengths})
+    logits = logits_fn(cfg, params, x).astype(jnp.float32)
+    return logits, pool

@@ -1,9 +1,15 @@
 """repro.serve — slot-based continuous-batching serving engine.
 
 Replaces the wave-batching API (`repro.dist.server.BatchedServer`, now a
-deprecation shim over this engine): a fixed slot arena of KV caches, one
-persistent jitted decode step over all slots, and an admission scheduler
-that prefills queued requests into freed slots between decode steps.
+deprecation shim over this engine): a fixed batch of decode rows, one
+persistent jitted decode step, and an admission scheduler that prefills
+queued requests into freed rows between decode steps.  KV storage is
+either a fixed slot arena (one capacity-T cache row per slot) or, with
+`Engine(paged=True)`, a shared pool of fixed-size KV blocks with
+per-slot block tables (`repro.serve.paging`) and chunked prefill —
+memory then scales with live tokens instead of worst-case length and
+generations are bounded by the pool, not a per-slot capacity.
 """
 from repro.serve.bucketing import bucket_length, num_buckets  # noqa: F401
 from repro.serve.engine import Engine, Request  # noqa: F401
+from repro.serve.paging import BlockAllocator, blocks_needed  # noqa: F401

@@ -1,4 +1,4 @@
-"""Slot-based continuous-batching serving engine.
+"""Slot-based continuous-batching serving engine (arena or paged KV).
 
 The paper's core argument (arXiv 2202.03263) is that asynchrony wins
 wall-clock time: fast participants proceed instead of convoying behind
@@ -7,36 +7,53 @@ decodes until its *longest* generation finishes, so one long request
 convoys every short one.  This engine is the serving-side analogue of
 API-BCD's asynchrony:
 
-  * a fixed **slot arena** of `max_batch` KV-cache rows with per-row
-    write pointers/validity lengths (capacity bucketed to a power of
-    two),
-  * ONE persistent jitted decode step over all slots — dead slots are
-    masked host-side and recycled, so there are no recompiles as the
-    batch composition churns,
+  * a fixed batch of `max_batch` decode rows, ONE persistent jitted
+    decode step over all of them — dead rows are masked host-side and
+    recycled, so there are no recompiles as the batch composition
+    churns,
   * an **admission scheduler** that prefills a queued request into any
-    freed slot *between* decode steps (batch-1 prefill, prompt length
-    bucketed to a power of two) while the other slots keep decoding.
+    freed row *between* decode steps while the other rows keep
+    decoding,
+  * two KV storage modes behind the same submit/step/run API:
+
+    **arena** (default): each row owns a full capacity-T cache row
+    (power-of-two bucketed), so a request is bounded by
+    `plen + max_new_tokens <= capacity` and memory scales with the
+    worst case whether or not the tokens ever exist.
+
+    **paged** (`paged=True`): all rows share one pool of fixed-size KV
+    blocks (`models.transformer.init_pool`) with host-side per-row
+    block tables (`repro.serve.paging`).  Blocks are allocated on
+    demand as decode crosses block boundaries and freed the moment a
+    request finishes, so memory scales with *live* tokens; admission is
+    gated on free blocks, not free full-length rows, and generations
+    are bounded by the pool, not a per-slot capacity.  Long prompts
+    stream in through fixed-size **chunked prefill** (one compile)
+    instead of one padded batch-1 launch.  Paged mode covers
+    attention-family stacks (GQA and MLA share the code path); the
+    engine auto-selects the arena for recurrent state (no pages to
+    page) and sliding-window rings (they rely on eviction, which pages
+    never do).
 
 Greedy decode is row-independent (no cross-batch ops in the model), so
 a request admitted into a half-full decode batch produces bit-identical
-output to the same request served alone — batching and admission timing
-are semantically inert (tests/test_server.py asserts this).
-
-Generations are bounded by the slot capacity (`plen + max_new_tokens <=
-max_len`); paged KV for longer-than-slot generations is the recorded
-follow-up (ROADMAP).
+output to the same request served alone — batching, admission timing,
+and the arena/paged storage choice are all semantically inert
+(tests/test_server.py asserts this).
 """
 from __future__ import annotations
 
 import dataclasses
 import weakref
-from typing import List, Optional
+from collections import deque
+from typing import Deque, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.serve.bucketing import bucket_length
+from repro.serve.paging import BlockAllocator, blocks_needed
 
 _PREFILL_FLOOR = 8      # smallest prompt bucket (keeps compile count tiny)
 
@@ -72,10 +89,18 @@ class Engine:
 
     API: submit(prompt, max_new_tokens, eos_id) -> uid;
     step() -> requests finished by this step; run() -> drain the queue.
+
+    paged=True requests the block-pool KV backend (see module
+    docstring); the engine falls back to the arena when the model
+    cannot page (`engine.paged` reports the resolved mode).
+    block_size / num_blocks / prefill_chunk size the pool (defaults:
+    the arena's footprint, i.e. max_batch * capacity tokens of blocks).
     """
 
     def __init__(self, model, params, *, max_batch: int = 8,
-                 max_len: int = 256, cache_dtype=jnp.bfloat16, mesh=None):
+                 max_len: int = 256, cache_dtype=jnp.bfloat16, mesh=None,
+                 paged: bool = False, block_size: int = 16,
+                 num_blocks: Optional[int] = None, prefill_chunk: int = 32):
         if model.prefill_into_slot is None:
             raise NotImplementedError(
                 f"family {model.cfg.family!r} has no slot-arena entry points")
@@ -103,10 +128,65 @@ class Engine:
                                      dtype=cache_dtype))
         self._pad_prompts &= self._min_ring(arena_shapes) >= self.capacity
 
-        # donation avoids a full arena copy per step; CPU jax only warns,
-        # so gate it on the backend.
+        # paged KV needs chunk-paddable full-causal attention everywhere:
+        # auto-select the arena for recurrent/moe (chunking changes
+        # routing capacity) and sliding-window stacks.  init_pool itself
+        # rejects windows — including a window override baked into the
+        # model at build time — so probe it abstractly.
+        self.paged = False
+        if (paged and model.init_pool is not None
+                and all(t == "attn" for t in model.cfg.layer_types)):
+            try:
+                jax.eval_shape(lambda: model.init_pool(1, 2,
+                                                       dtype=cache_dtype))
+                self.paged = True
+            except NotImplementedError:
+                pass
+
+        # donation avoids a full arena/pool copy per step; CPU jax only
+        # warns, so gate it on the backend.
         donate = jax.default_backend() != "cpu"
-        if mesh is not None:
+        if self.paged:
+            self.block_size = int(block_size)
+            self.num_blocks = int(
+                num_blocks if num_blocks is not None
+                else max(1, self.max_batch * self.capacity
+                         // self.block_size))
+            self.prefill_chunk = int(prefill_chunk)
+            self._allocator = BlockAllocator(self.num_blocks)
+            # one table row per decode slot; the full width lets a
+            # single request, at the limit, use every pool block — but
+            # the jitted steps only ever see a power-of-two slice wide
+            # enough for the live maximum (_table_width), so per-step
+            # attention work scales with live tokens, not pool size,
+            # at O(log num_blocks) compiles
+            self._tables = np.zeros((self.max_batch, self.num_blocks),
+                                    np.int32)
+            self._slot_reserved = [0] * self.max_batch
+            if mesh is not None:
+                from repro.dist.serving import (
+                    make_decode_rows_paged_step, make_prefill_chunk_step)
+                pool_shapes = jax.eval_shape(
+                    lambda: model.init_pool(self.num_blocks, self.block_size,
+                                            dtype=cache_dtype))
+                self._prefill, (_, c_sh) = make_prefill_chunk_step(
+                    model, mesh, pool_shapes)
+                self._decode, _ = make_decode_rows_paged_step(
+                    model, mesh, self.max_batch, pool_shapes)
+                self._caches = jax.device_put(
+                    model.init_pool(self.num_blocks, self.block_size,
+                                    dtype=cache_dtype), c_sh)
+            else:
+                self._prefill = _shared_jit(
+                    model, "prefill_chunk_into_blocks",
+                    donate_argnums=(5,) if donate else ())
+                self._decode = _shared_jit(
+                    model, "decode_rows_paged",
+                    donate_argnums=(2,) if donate else ())
+                self._caches = model.init_pool(self.num_blocks,
+                                               self.block_size,
+                                               dtype=cache_dtype)
+        elif mesh is not None:
             from repro.dist.serving import (make_decode_rows_step,
                                             make_slot_prefill_step)
             self._prefill, (_, c_sh) = make_slot_prefill_step(
@@ -124,13 +204,15 @@ class Engine:
             self._caches = model.init_arena(self.max_batch, self.capacity,
                                             dtype=cache_dtype)
 
-        self._queue: List[Request] = []
+        self._queue: Deque[Request] = deque()
         self._done: List[Request] = []
         self._next_uid = 0
         self._slot_req: List[Optional[Request]] = [None] * self.max_batch
         self._gen: List[List[int]] = [[] for _ in range(self.max_batch)]
-        self._lengths = np.zeros(self.max_batch, np.int64)  # tokens in cache
-        self._cur = np.zeros(self.max_batch, np.int64)      # current token
+        # held as int32 end-to-end: these feed the jitted step directly
+        # (no per-step downcast)
+        self._lengths = np.zeros(self.max_batch, np.int32)  # tokens in cache
+        self._cur = np.zeros(self.max_batch, np.int32)      # current token
 
     @staticmethod
     def _min_ring(arena_shapes):
@@ -155,9 +237,28 @@ class Engine:
     # request intake
     # ------------------------------------------------------------------
 
+    def _worst_case_blocks(self, plen: int, max_new: int) -> int:
+        """Blocks a request can ever occupy: prefill writes `plen`
+        entries and each decode step one more, so the cache peaks at
+        plen + max_new - 1 tokens (the final token is never inserted)."""
+        return blocks_needed(plen + max_new - 1, self.block_size)
+
+    def _table_width(self, num_tokens: int) -> int:
+        """Pow2-bucketed table columns covering `num_tokens` positions
+        (block-table slices are jit shapes: bucketing bounds compiles at
+        O(log num_blocks) while per-step gather/kernel work tracks the
+        live maximum instead of the whole pool)."""
+        return min(bucket_length(blocks_needed(num_tokens,
+                                               self.block_size)),
+                   self.num_blocks)
+
     def submit(self, prompt, max_new_tokens: int,
                eos_id: Optional[int] = None) -> int:
         """Queue a token-id prompt; returns the request uid.
+
+        Arena mode bounds a request to its slot (`plen + max_new_tokens
+        <= capacity`); paged mode admits anything the pool can ever
+        hold — the per-slot capacity check is lifted.
 
         Prompts are token-only: a VLM served through the engine runs
         text-only (no patch prefix) — multimodal admission inputs are a
@@ -165,11 +266,18 @@ class Engine:
         prompt = np.asarray(prompt, np.int32)
         assert prompt.ndim == 1 and prompt.size > 0, prompt.shape
         assert max_new_tokens >= 1, max_new_tokens
-        if len(prompt) + max_new_tokens > self.capacity:
+        if self.paged:
+            need = self._worst_case_blocks(len(prompt), max_new_tokens)
+            if need > self.num_blocks:
+                raise ValueError(
+                    f"prompt ({len(prompt)}) + max_new_tokens "
+                    f"({max_new_tokens}) needs {need} KV blocks; the pool "
+                    f"has {self.num_blocks} (raise num_blocks)")
+        elif len(prompt) + max_new_tokens > self.capacity:
             raise ValueError(
                 f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens})"
-                f" exceeds slot capacity {self.capacity}; paged KV for"
-                " longer-than-slot generations is a recorded follow-up")
+                f" exceeds slot capacity {self.capacity}; use "
+                "Engine(paged=True) for longer-than-slot generations")
         uid = self._next_uid
         self._next_uid += 1
         self._queue.append(Request(uid, prompt, int(max_new_tokens),
@@ -183,8 +291,13 @@ class Engine:
 
     @property
     def num_active(self) -> int:
-        """Requests currently decoding in the arena."""
+        """Requests currently decoding in the batch."""
         return sum(r is not None for r in self._slot_req)
+
+    @property
+    def free_blocks(self) -> int:
+        """Unallocated, unreserved pool blocks (paged mode only)."""
+        return self._allocator.available if self.paged else 0
 
     # ------------------------------------------------------------------
     # serving
@@ -204,6 +317,38 @@ class Engine:
         logits, self._caches = self._prefill(
             self.params, jnp.asarray(toks), jnp.int32(plen), jnp.int32(slot),
             self._caches)
+        return self._start_generation(req, slot, logits, plen)
+
+    def _admit_paged(self, req: Request, slot: int) -> Optional[Request]:
+        """Chunked prefill of `req` into pool blocks tracked by the
+        slot's block table.  The caller already checked admissibility;
+        this allocates the prompt's blocks now and reserves the decode
+        worst case so lazy per-step allocation can never fail."""
+        plen = len(req.prompt)
+        need = self._worst_case_blocks(plen, req.max_new_tokens)
+        n_prompt = blocks_needed(plen, self.block_size)
+        blocks = self._allocator.alloc(n_prompt)
+        self._allocator.reserve(need - n_prompt)
+        self._slot_reserved[slot] = need - n_prompt
+        self._tables[slot, :n_prompt] = blocks
+        # slice the table to the prompt's bucketed width: chunk-pad
+        # positions past it are routed to the null block by the scatter
+        table = jnp.asarray(self._tables[slot, :self._table_width(plen)])
+
+        c = self.prefill_chunk
+        self.prefill_shapes.add(c)
+        logits = None
+        for off in range(0, plen, c):
+            chunk = req.prompt[off:off + c]
+            toks = np.zeros((1, c), np.int32)
+            toks[0, :len(chunk)] = chunk
+            logits, self._caches = self._prefill(
+                self.params, jnp.asarray(toks), jnp.int32(len(chunk)),
+                jnp.int32(off), table, self._caches)
+        return self._start_generation(req, slot, logits, plen)
+
+    def _start_generation(self, req: Request, slot: int, logits,
+                          plen: int) -> Optional[Request]:
         tok = int(np.asarray(jnp.argmax(logits[0, -1])))
         self._slot_req[slot] = req
         self._gen[slot] = [tok]
@@ -219,16 +364,45 @@ class Engine:
         req.output = np.asarray(self._gen[slot], np.int32)
         self._slot_req[slot] = None
         self._gen[slot] = []
+        if self.paged:
+            # free the slot's blocks + any unused worst-case reservation
+            # (EOS before the budget); zero the table/length so the dead
+            # row only ever touches the null block
+            used = self._tables[slot][self._tables[slot] != 0]
+            self._allocator.release(used)
+            self._allocator.unreserve(self._slot_reserved[slot])
+            self._slot_reserved[slot] = 0
+            self._tables[slot] = 0
+            self._lengths[slot] = 0
         self._done.append(req)
         return req
 
+    def _can_admit(self, req: Request) -> bool:
+        if not self.paged:
+            return True
+        return (self._allocator.available
+                >= self._worst_case_blocks(len(req.prompt),
+                                           req.max_new_tokens))
+
     def step(self) -> List[Request]:
         """Admit queued requests into free slots, then run ONE decode
-        step over the arena; returns the requests finished by this step."""
+        step over the batch; returns the requests finished by this step.
+
+        Admission is FIFO: when the queue head cannot be admitted yet
+        (paged mode, not enough free blocks), later requests do not jump
+        it — finished requests free its blocks on subsequent steps."""
         finished: List[Request] = []
+        head_blocked = False
         for slot in range(self.max_batch):
+            if head_blocked:
+                break
             while self._slot_req[slot] is None and self._queue:
-                f = self._admit(self._queue.pop(0), slot)
+                if not self._can_admit(self._queue[0]):
+                    head_blocked = True     # FIFO: nothing may jump it
+                    break
+                req = self._queue.popleft()
+                admit = self._admit_paged if self.paged else self._admit
+                f = admit(req, slot)
                 if f is not None:
                     finished.append(f)
 
@@ -237,10 +411,26 @@ class Engine:
         if not active:
             return finished
 
-        tokens = jnp.asarray(self._cur.reshape(-1, 1).astype(np.int32))
-        positions = jnp.asarray(self._lengths.astype(np.int32))
-        logits, self._caches = self._decode(self.params, tokens,
-                                            self._caches, positions)
+        tokens = jnp.asarray(self._cur.reshape(-1, 1))
+        if self.paged:
+            # top up the block covering this step's write position
+            for s in active:
+                bi = int(self._lengths[s]) // self.block_size
+                if self._tables[s, bi] == 0:
+                    (blk,) = self._allocator.alloc(1, reserved=True)
+                    self._slot_reserved[s] -= 1
+                    self._tables[s, bi] = blk
+            # +1: the step inserts each live row's incoming token first
+            w = self._table_width(max(int(self._lengths[s]) + 1
+                                      for s in active))
+            logits, self._caches = self._decode(
+                self.params, tokens, self._caches,
+                jnp.asarray(self._tables[:, :w]),
+                jnp.asarray(self._lengths))
+        else:
+            positions = jnp.asarray(self._lengths)
+            logits, self._caches = self._decode(self.params, tokens,
+                                                self._caches, positions)
         nxt = np.asarray(jnp.argmax(logits[:, -1], -1)).astype(np.int32)
         for s in active:
             self._lengths[s] += 1
@@ -254,7 +444,7 @@ class Engine:
         return finished
 
     def run(self) -> List[Request]:
-        """Drain queue + arena; returns every request completed so far
+        """Drain queue + batch; returns every request completed so far
         (accumulating across earlier step() calls)."""
         while self._queue or self.num_active:
             self.step()

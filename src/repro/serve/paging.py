@@ -1,0 +1,97 @@
+"""Host-side KV block allocator for the paged serving engine.
+
+The paged engine replaces the fixed-row slot arena with one shared pool
+of fixed-size KV blocks (`models.transformer.init_pool`: per-layer
+leaves `[layers, num_blocks + 1, block_size, ...]`).  This module owns
+the *host* half of that design: a free-list of block ids, worst-case
+reservation accounting so lazy per-step allocation can never fail
+mid-generation, and the block-table bookkeeping per slot.
+
+Block id 0 is reserved as the null/trash block: unallocated block-table
+entries point at it, masked-out writes are routed into it, and it is
+never attended to (the per-row validity length masks it out), so the
+allocator hands out ids 1..num_blocks.
+
+Allocation discipline (deadlock-free without preemption):
+
+  * at admission the engine checks `available >= worst_case_blocks`,
+    allocates the prompt's blocks immediately, and `reserve()`s the
+    rest (the blocks decode will need later);
+  * each decode step that crosses a block boundary calls
+    `alloc(1, reserved=True)` — guaranteed to succeed because the
+    admission reservation already accounted for it;
+  * on finish the engine `release()`s the slot's blocks and drops any
+    unused reservation (EOS before the budget).
+"""
+from __future__ import annotations
+
+from typing import List
+
+
+def blocks_needed(num_tokens: int, block_size: int) -> int:
+    """Blocks required to hold `num_tokens` cache entries."""
+    return -(-max(int(num_tokens), 0) // int(block_size))
+
+
+class BlockAllocator:
+    """Free-list allocator over block ids 1..num_blocks (0 = null block).
+
+    `available` subtracts outstanding reservations from the free count,
+    so admission against it guarantees every later reserved alloc
+    succeeds.
+    """
+
+    def __init__(self, num_blocks: int):
+        assert num_blocks >= 1, num_blocks
+        self.num_blocks = int(num_blocks)
+        # FIFO free list: lowest ids first keeps tables reproducible;
+        # the mirror set makes the double-free guard O(1) per block
+        self._free: List[int] = list(range(1, self.num_blocks + 1))
+        self._free_set = set(self._free)
+        self._reserved = 0
+
+    @property
+    def free_count(self) -> int:
+        """Blocks on the free list (including reserved-but-unallocated)."""
+        return len(self._free)
+
+    @property
+    def available(self) -> int:
+        """Blocks admissible right now: free minus outstanding reserves."""
+        return len(self._free) - self._reserved
+
+    def reserve(self, n: int) -> None:
+        """Earmark `n` free blocks for future reserved allocs."""
+        assert n >= 0 and self._reserved + n <= len(self._free), (
+            n, self._reserved, len(self._free))
+        self._reserved += n
+
+    def unreserve(self, n: int) -> None:
+        """Drop `n` earmarks (request finished under its worst case)."""
+        assert 0 <= n <= self._reserved, (n, self._reserved)
+        self._reserved -= n
+
+    def alloc(self, n: int, *, reserved: bool = False) -> List[int]:
+        """Pop `n` block ids off the free list.
+
+        reserved=True consumes an earlier `reserve()` earmark (the
+        lazy decode-step path); reserved=False is the admission path
+        and must leave the earmarked blocks untouched."""
+        if reserved:
+            assert n <= self._reserved, (n, self._reserved)
+            self._reserved -= n
+        else:
+            assert n <= self.available, (n, self.available, self._reserved)
+        out = self._free[:n]
+        del self._free[:n]
+        self._free_set.difference_update(out)
+        return out
+
+    def release(self, blocks) -> None:
+        """Return block ids to the free list (finish/abort path)."""
+        for b in blocks:
+            b = int(b)
+            assert 1 <= b <= self.num_blocks, b
+            assert b not in self._free_set, f"double free of block {b}"
+            self._free.append(b)
+            self._free_set.add(b)

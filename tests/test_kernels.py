@@ -135,6 +135,59 @@ def test_decode_attention_per_row_lengths(dtype):
                                    **TOL[dtype])
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_paged(dtype):
+    """Block-table decode: each row's KV is scattered across a shared
+    block pool; the kernel must match the gather-then-linear oracle."""
+    rng = np.random.default_rng(9)
+    b, h, kv, hd = 3, 4, 2, 64
+    bs, w = 8, 6                       # block_size, table width
+    nb = 1 + b * w                     # null block + enough for all rows
+    q = _rand(rng, (b, h, hd), dtype)
+    k_pool = _rand(rng, (nb, bs, kv, hd), dtype)
+    v_pool = _rand(rng, (nb, bs, kv, hd), dtype)
+    # rows own disjoint random (non-contiguous) blocks; trailing entries
+    # of short rows point at the null block 0
+    perm = rng.permutation(nb - 1) + 1
+    tables = perm[:b * w].reshape(b, w).astype(np.int32)
+    lengths = np.asarray([1, 19, w * bs], np.int32)
+    for i, n in enumerate(lengths):
+        tables[i, (int(n) + bs - 1) // bs:] = 0
+    tables = jnp.asarray(tables)
+    out = ops.decode_attention_paged(q, k_pool, v_pool, tables,
+                                     jnp.asarray(lengths), interpret=True)
+    want = ref.decode_attention_paged(q, k_pool, v_pool, tables,
+                                      jnp.asarray(lengths))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_decode_attention_paged_degenerate_arena():
+    """With an identity block table the paged kernel IS the linear
+    kernel: same inputs, same per-row lengths, same outputs (the slot
+    arena is the 1-contiguous-run-of-blocks special case)."""
+    rng = np.random.default_rng(10)
+    b, t, h, kv, hd = 2, 256, 4, 2, 64
+    bs = 64
+    q = _rand(rng, (b, h, hd), jnp.float32)
+    k = _rand(rng, (b, t, kv, hd), jnp.float32)
+    v = _rand(rng, (b, t, kv, hd), jnp.float32)
+    lengths = jnp.asarray([100, 256], jnp.int32)
+    linear = ops.decode_attention(q, k, v, lengths=lengths, block_k=bs,
+                                  interpret=True)
+    # pool = the same caches cut into contiguous blocks (plus null 0)
+    w = t // bs
+    pool_k = jnp.concatenate(
+        [jnp.zeros((1, bs, kv, hd)), k.reshape(b * w, bs, kv, hd)])
+    pool_v = jnp.concatenate(
+        [jnp.zeros((1, bs, kv, hd)), v.reshape(b * w, bs, kv, hd)])
+    tables = 1 + jnp.arange(b * w, dtype=jnp.int32).reshape(b, w)
+    paged = ops.decode_attention_paged(q, pool_k, pool_v, tables, lengths,
+                                       interpret=True)
+    np.testing.assert_allclose(np.asarray(paged), np.asarray(linear),
+                               rtol=1e-6, atol=1e-6)
+
+
 # ---------------------------------------------------------------------------
 # rwkv6
 # ---------------------------------------------------------------------------

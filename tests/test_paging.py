@@ -1,0 +1,63 @@
+"""Host-side paged-KV bookkeeping: the block allocator's free-list and
+worst-case reservation accounting (repro.serve.paging)."""
+import numpy as np
+import pytest
+
+from repro.serve.paging import BlockAllocator, blocks_needed
+
+
+def test_blocks_needed():
+    assert blocks_needed(0, 16) == 0
+    assert blocks_needed(1, 16) == 1
+    assert blocks_needed(16, 16) == 1
+    assert blocks_needed(17, 16) == 2
+    assert blocks_needed(33, 16) == 3
+
+
+def test_alloc_free_roundtrip():
+    a = BlockAllocator(4)
+    assert a.available == 4
+    got = a.alloc(3)
+    assert len(got) == 3 and all(1 <= b <= 4 for b in got)
+    assert len(set(got)) == 3 and a.available == 1
+    a.release(got)
+    assert a.available == 4
+    # block 0 is never handed out (the null block)
+    assert 0 not in a.alloc(4)
+
+
+def test_reservation_blocks_admission_but_not_reserved_allocs():
+    a = BlockAllocator(4)
+    a.alloc(1)
+    a.reserve(2)                      # decode worst case for request A
+    assert a.available == 1           # 3 free - 2 reserved
+    # a second request needing 2 cannot be admitted against available...
+    with pytest.raises(AssertionError):
+        a.alloc(2)
+    # ...but request A's lazy decode allocs draw from its reservation
+    a.alloc(1, reserved=True)
+    a.alloc(1, reserved=True)
+    assert a.available == 1           # earmarks consumed, 1 truly free
+
+
+def test_unreserve_returns_headroom():
+    a = BlockAllocator(3)
+    a.reserve(3)
+    assert a.available == 0
+    a.unreserve(2)                    # finished under the worst case
+    assert a.available == 2
+
+
+def test_double_free_caught():
+    a = BlockAllocator(2)
+    (b,) = a.alloc(1)
+    a.release([b])
+    with pytest.raises(AssertionError, match="double free"):
+        a.release([b])
+
+
+def test_release_accepts_numpy_ids():
+    a = BlockAllocator(3)
+    got = a.alloc(2)
+    a.release(np.asarray(got, np.int32))
+    assert a.available == 3

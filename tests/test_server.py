@@ -190,6 +190,182 @@ def test_engine_rejects_longer_than_slot(served):
                    max_new_tokens=20)
 
 
+def test_engine_eos_on_prefill_token(served):
+    """EOS emitted by the prefill forward itself (the request's very
+    first generated token) finishes the request during admission — it
+    never occupies a decode step, and the slot is immediately
+    reusable."""
+    cfg, model, params = served
+    rng = np.random.default_rng(16)
+    prompt = rng.integers(0, cfg.vocab_size, (6,))
+    probe = Engine(model, params, max_batch=1, max_len=32)
+    probe.submit(prompt, max_new_tokens=1)
+    first_tok = int(probe.run()[0].output[0])
+
+    eng = Engine(model, params, max_batch=1, max_len=32)
+    eng.submit(prompt, max_new_tokens=10, eos_id=first_tok)
+    other = eng.submit(rng.integers(0, cfg.vocab_size, (4,)),
+                       max_new_tokens=2)
+    done = eng.step()                   # admission finishes request 0
+    assert [len(r.output) for r in done if r.uid != other] == [1]
+    assert eng.run()[-1].uid == other   # slot was recycled
+
+
+def test_bucket_length_floor_and_boundaries():
+    """Pow2 boundaries and the floor clamp (satellite coverage for the
+    admission bucketing)."""
+    assert [bucket_length(n) for n in (1, 2, 3, 4, 8, 9, 16, 17)] == \
+        [1, 2, 4, 4, 8, 16, 16, 32]
+    assert bucket_length(3, floor=8) == 8       # floor clamps small lengths
+    assert bucket_length(8, floor=8) == 8       # floor itself is a bucket
+    assert bucket_length(9, floor=8) == 16      # floor does not cap large
+    assert bucket_length(0) == 1                # degenerate inputs
+    assert num_buckets(16, floor=16) == 1
+
+
+# ---------------------------------------------------------------------------
+# paged KV (block-pool) engine
+# ---------------------------------------------------------------------------
+
+
+def _raw_greedy_loop(model, params, prompt, budget):
+    """Reference: single-request prefill + decode_step loop."""
+    from functools import partial
+    plen = len(prompt)
+    prefill = jax.jit(partial(model.prefill, cache_len=plen + budget))
+    decode = jax.jit(model.decode_step)
+    logits, caches = prefill(params, {"tokens": jnp.asarray(prompt[None])})
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    out = [int(tok[0, 0])]
+    for i in range(1, budget):
+        logits, caches = decode(params, tok, caches, jnp.int32(plen + i - 1))
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        out.append(int(tok[0, 0]))
+    return np.asarray(out, np.int32)
+
+
+def test_engine_paged_longer_than_slot_gqa(served):
+    """Acceptance: plen + max_new_tokens > slot capacity (but within the
+    pool budget) completes through Engine(paged=True), bit-identical to
+    the raw single-request decode loop — with another request in flight
+    so pool scatter/gather interleaves across rows."""
+    cfg, model, params = served
+    rng = np.random.default_rng(20)
+    prompt = rng.integers(0, cfg.vocab_size, (10,))
+    budget = 20                         # 10 + 20 = 30 > capacity 16
+    want = _raw_greedy_loop(model, params, prompt, budget)
+
+    eng = Engine(model, params, max_batch=2, max_len=16, paged=True,
+                 block_size=8, prefill_chunk=4)
+    assert eng.paged and eng.num_blocks * eng.block_size >= 30
+    with pytest.raises(ValueError):     # pool budget still bounds requests
+        eng.submit(prompt, max_new_tokens=10_000)
+    uid = eng.submit(prompt, max_new_tokens=budget)
+    eng.submit(rng.integers(0, cfg.vocab_size, (5,)), max_new_tokens=6)
+    outs = {r.uid: r.output for r in eng.run()}
+    np.testing.assert_array_equal(outs[uid], want)
+    assert eng.free_blocks == eng.num_blocks    # all blocks returned
+
+
+def test_engine_paged_longer_than_slot_mla():
+    """Same acceptance bar on an MLA (latent-cache) config: GQA and MLA
+    share the paged code path."""
+    from repro.configs.base import ArchConfig, MLAConfig
+    cfg = ArchConfig(name="mla-paged-t", family="dense", source="test",
+                     num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+                     d_ff=128, vocab_size=256, tie_embeddings=True,
+                     mla=MLAConfig(kv_lora_rank=16, q_lora_rank=32,
+                                   qk_nope_head_dim=16, qk_rope_head_dim=8,
+                                   v_head_dim=16))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    rng = np.random.default_rng(21)
+    prompt = rng.integers(0, cfg.vocab_size, (9,))
+    budget = 18                         # 9 + 18 = 27 > capacity 16
+    want = _raw_greedy_loop(model, params, prompt, budget)
+
+    eng = Engine(model, params, max_batch=2, max_len=16, paged=True,
+                 block_size=4, prefill_chunk=4)
+    assert eng.paged
+    uid = eng.submit(prompt, max_new_tokens=budget)
+    eng.submit(rng.integers(0, cfg.vocab_size, (5,)), max_new_tokens=8)
+    outs = {r.uid: r.output for r in eng.run()}
+    np.testing.assert_array_equal(outs[uid], want)
+    assert eng.free_blocks == eng.num_blocks
+
+
+def test_engine_paged_matches_arena_mixed_lengths(served):
+    """Paged vs arena bit-identity on a mixed-length workload that fits
+    both: the storage backend is semantically inert."""
+    cfg, model, params = served
+    rng = np.random.default_rng(22)
+    reqs = [(rng.integers(0, cfg.vocab_size, (int(n),)), int(b))
+            for n, b in ((4, 2), (7, 9), (5, 1), (6, 4), (3, 6), (8, 8))]
+    arena = Engine(model, params, max_batch=3, max_len=32)
+    paged = Engine(model, params, max_batch=3, max_len=32, paged=True,
+                   block_size=8)
+    ua = [arena.submit(p, max_new_tokens=b) for p, b in reqs]
+    up = [paged.submit(p, max_new_tokens=b) for p, b in reqs]
+    oa = {r.uid: r.output for r in arena.run()}
+    op = {r.uid: r.output for r in paged.run()}
+    for a, b in zip(ua, up):
+        np.testing.assert_array_equal(oa[a], op[b])
+    assert paged.free_blocks == paged.num_blocks
+
+
+def test_engine_paged_admission_waits_for_blocks(served):
+    """FIFO under block scarcity: a pool with room for ~one live request
+    still drains a deeper queue (finished requests free their blocks,
+    the head is admitted next) and never deadlocks."""
+    cfg, model, params = served
+    rng = np.random.default_rng(23)
+    eng = Engine(model, params, max_batch=4, max_len=16, paged=True,
+                 block_size=8, num_blocks=4)     # 32 pooled tokens
+    reqs = [(rng.integers(0, cfg.vocab_size, (6,)), 12) for _ in range(3)]
+    uids = [eng.submit(p, max_new_tokens=b) for p, b in reqs]
+    eng.step()
+    # worst case 3 blocks each: only one fits alongside another's reserve
+    assert eng.num_active < 3 and eng.pending >= 1
+    done = eng.run()
+    assert sorted(r.uid for r in done) == sorted(uids)
+    for (p, b), u in zip(reqs, uids):
+        want = {r.uid: r.output for r in done}[u]
+        ref_eng = Engine(model, params, max_batch=1, max_len=32)
+        ref_eng.submit(p, max_new_tokens=b)
+        np.testing.assert_array_equal(want, ref_eng.run()[0].output)
+
+
+@pytest.mark.parametrize("arch,reason", [
+    ("rwkv6-1.6b", "recurrent state has no pages"),
+    ("deepseek-v2-236b", "moe chunking changes routing capacity"),
+])
+def test_engine_paged_auto_selects_arena(arch, reason):
+    """paged=True on families that cannot page falls back to the arena
+    and still serves correctly."""
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(4))
+    rng = np.random.default_rng(24)
+    eng = Engine(model, params, max_batch=2, max_len=32, paged=True)
+    assert not eng.paged, reason
+    prompt = rng.integers(0, cfg.vocab_size, (5,))
+    uid = eng.submit(prompt, max_new_tokens=4)
+    ref = Engine(model, params, max_batch=2, max_len=32)
+    ref.submit(prompt, max_new_tokens=4)
+    np.testing.assert_array_equal(
+        {r.uid: r.output for r in eng.run()}[uid], ref.run()[0].output)
+
+
+def test_engine_paged_auto_selects_arena_sliding_window():
+    """A window override baked into the model (ring < capacity) must
+    also refuse paging: pages never evict, a sliding window must."""
+    cfg = get_smoke("qwen2-0.5b")
+    model = build_model(cfg, window=16)
+    params = model.init(jax.random.PRNGKey(5))
+    eng = Engine(model, params, max_batch=2, max_len=32, paged=True)
+    assert not eng.paged
+
+
 def test_bucketing_bounds_compiles(served):
     """Distinct plen+budget combos collapse into O(log max_len) buckets:
     the shim keeps ONE engine for caps 9..12 (all bucket to 16), and the
@@ -244,8 +420,10 @@ def test_engine_other_families_bit_identical(arch):
 def test_engine_on_production_mesh_subprocess():
     """Engine(mesh=...) serves on a ("data", "model") mesh via the
     slot-arena sharding specs; mid-flight admission stays bit-identical
-    to a same-mesh engine serving the request alone (subprocess: needs
-    4 forced host devices)."""
+    to a same-mesh engine serving the request alone.  The paged backend
+    (pool_shardings + chunked prefill) must also complete a
+    longer-than-slot request on the mesh, matching the host arena
+    reference (subprocess: needs 4 forced host devices)."""
     import os
     import subprocess
     import sys
@@ -282,6 +460,21 @@ eng.step(); eng.step()
 uid = eng.submit(a, max_new_tokens=4)
 outs = {r.uid: r.output for r in eng.run()}
 np.testing.assert_array_equal(outs[uid], want)
+
+# paged on the mesh: longer-than-slot generation, vs a same-mesh arena
+# reference with a big enough slot and the SAME max_batch (sharding is
+# shape-dependent: host-vs-mesh or cross-batch-size bitwise comparison
+# is out of scope — sharded reductions reorder float ops)
+mesh_ref = Engine(model, params, max_batch=2, max_len=32, mesh=mesh)
+mesh_ref.submit(a, max_new_tokens=20)            # 5 + 20 > capacity 16
+want_long = mesh_ref.run()[0].output
+pg = Engine(model, params, max_batch=2, max_len=16, mesh=mesh, paged=True,
+            block_size=8, prefill_chunk=4)
+assert pg.paged
+uid = pg.submit(a, max_new_tokens=20)
+pg.submit(b, max_new_tokens=6)
+outs = {r.uid: r.output for r in pg.run()}
+np.testing.assert_array_equal(outs[uid], want_long)
 print("MESH_ENGINE_OK")
 """
     res = subprocess.run([sys.executable, "-c", code], env=env,
