@@ -117,7 +117,13 @@ def make_decode_rows_step(model, mesh, max_batch, arena_shapes):
 # cross-device) while kv-head / latent feature dims shard over "model" —
 # `pool_shardings`.  Block tables and per-row lengths are small int32
 # host state and replicate.  `Engine(mesh=..., paged=True)` consumes
-# these builders and otherwise runs unchanged.
+# these builders and otherwise runs unchanged — including
+# preempt-and-recompute: eviction is pure host bookkeeping (free the
+# victim's blocks, re-queue it), a recompute re-admission re-runs the
+# victim's prompt prefill verbatim (same chunk shape, same offsets,
+# same pow2-bucketed table width), and its generated-so-far tokens
+# replay through the regular paged decode step — so preemption never
+# lowers a new mesh step.
 # ---------------------------------------------------------------------------
 
 
@@ -127,7 +133,9 @@ def make_prefill_chunk_step(model, mesh, pool_shapes):
     Returns (jitted prefill(params, tokens, length, ctx_len, table,
     pool), (p_sh, c_sh)).  tokens is one batch-1 chunk (replicated);
     the pool keeps its decode shardings so admission does not reshuffle
-    blocks other slots are decoding from.
+    blocks other slots are decoding from.  Recompute re-admissions
+    after a preemption re-run the victim's prompt prefill through this
+    step verbatim — zero extra lowerings.
     """
     p_sh = serve_param_shardings(mesh, _param_shapes(model))
     c_sh = pool_shardings(mesh, pool_shapes)

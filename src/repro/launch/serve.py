@@ -15,6 +15,10 @@ A/B the schedulers on the same workload:
     --paged        paged-KV backend: shared block pool, per-slot block
                    tables, chunked prefill (admission against free
                    blocks instead of full-length slots)
+    --preemption   paged admission policy: "recompute" (optimistic,
+                   preempt-and-recompute under pressure; default) or
+                   "reserve" (worst-case reservation, never preempts)
+                   — see docs/serving.md
 
 Encoder-decoder families (whisper) and VLMs (whose prompts carry a
 patch prefix the engine's token-only submit cannot express yet) keep a
@@ -97,6 +101,9 @@ def main():
                          "that cannot page)")
     ap.add_argument("--block-size", type=int, default=16,
                     help="paged KV block size in tokens")
+    ap.add_argument("--preemption", choices=("recompute", "reserve"),
+                    default="recompute",
+                    help="paged admission policy (docs/serving.md)")
     args = ap.parse_args()
 
     if args.devices:
@@ -134,7 +141,8 @@ def main():
     if args.mode == "continuous":
         srv = Engine(model, params, max_batch=args.max_batch,
                      max_len=max_len, paged=args.paged,
-                     block_size=args.block_size)
+                     block_size=args.block_size,
+                     preemption=args.preemption)
         if args.paged and not srv.paged:
             print(f"[{cfg.name}] cannot page this family; using the "
                   "slot arena")

@@ -8,8 +8,14 @@ either a fixed slot arena (one capacity-T cache row per slot) or, with
 `Engine(paged=True)`, a shared pool of fixed-size KV blocks with
 per-slot block tables (`repro.serve.paging`) and chunked prefill —
 memory then scales with live tokens instead of worst-case length and
-generations are bounded by the pool, not a per-slot capacity.
+generations are bounded by the pool, not a per-slot capacity.  Paged
+admission defaults to vLLM-style preempt-and-recompute
+(`preemption="recompute"`: optimistic admission against currently-free
+blocks, LIFO eviction + head re-queue under pressure, bitwise-identical
+outputs); `preemption="reserve"` keeps the pessimistic worst-case
+reservation policy.  See docs/serving.md for the full lifecycle.
 """
-from repro.serve.bucketing import bucket_length, num_buckets  # noqa: F401
+from repro.serve.bucketing import (bucket_length, chunks_needed,  # noqa: F401
+                                   num_buckets)
 from repro.serve.engine import Engine, Request  # noqa: F401
 from repro.serve.paging import BlockAllocator, blocks_needed  # noqa: F401

@@ -13,8 +13,18 @@ The engine prefills at exact lengths otherwise — recurrent layers fold
 padding into their state, moe capacity dropping depends on the static
 sequence length, and sliding-window rings would let pads evict real
 context.
+
+Preempt-and-recompute re-admissions land in the same bucket families:
+a recomputed request re-prefills ONLY its prompt, through the same
+fixed-size chunks at the same offsets as its original admission
+(`chunks_needed` of them, one compile total) against the same
+pow2-bucketed block-table width, and its generated-so-far tokens
+replay through the existing decode step — so preemption never
+introduces a new jit shape, on host or mesh.
 """
 from __future__ import annotations
+
+from repro.serve.paging import blocks_needed
 
 
 def bucket_length(n: int, floor: int = 1) -> int:
@@ -26,3 +36,11 @@ def bucket_length(n: int, floor: int = 1) -> int:
 def num_buckets(max_len: int, floor: int = 1) -> int:
     """How many distinct buckets lengths in [1, max_len] can map to."""
     return len({bucket_length(n, floor) for n in range(1, max_len + 1)})
+
+
+def chunks_needed(n: int, chunk: int) -> int:
+    """Fixed-size prefill chunks covering `n` tokens (the paged engine's
+    prefill launch count — recompute prompt re-prefills included).
+    Same ceil division as `paging.blocks_needed`, named for the
+    schedule-side question it answers."""
+    return blocks_needed(n, chunk)

@@ -35,11 +35,42 @@ API-BCD's asynchrony:
     page) and sliding-window rings (they rely on eviction, which pages
     never do).
 
+Paged admission comes in two policies (`preemption=`):
+
+    **"recompute"** (default): vLLM-style preempt-and-recompute.
+    Admission is optimistic — a request is admitted when the blocks
+    that are free *right now* cover its prompt (plus a one-block
+    watermark), not its worst case.  When a decode step crosses a block
+    boundary and the pool is empty, the scheduler preempts the newest
+    admission (LIFO — the oldest running request is never evicted while
+    a younger one holds blocks), frees its blocks, and re-queues it in
+    uid position — ahead of every never-admitted request, so the queue
+    stays uid-sorted — for recompute: on re-admission its prompt streams back
+    in through the same chunked-prefill path (bit-identical to its
+    original admission — same chunks, same offsets), and its
+    generated-so-far tokens *replay* through the shared decode step,
+    one per step, logits discarded (each successor is already known).
+    Replay rides the same batched launches the live rows are decoding
+    in — recompute adds no extra device launches beyond the prompt
+    chunks — and because every position is rebuilt by the same kernel
+    that wrote it originally, the restored KV and decode state are
+    bit-for-bit the state of an uninterrupted run: the final output is
+    bitwise unchanged even where logits tie exactly.  (Re-prefilling
+    the generated tokens instead would be mathematically identical but
+    chunk-batched forwards round differently at the ULP level, which
+    flips exact ties.)  Every request still completes (the oldest
+    running request only grows), it just may pay recompute steps.
+
+    **"reserve"**: pessimistic worst-case reservation — admission
+    requires `available >= worst_case_blocks`, so a mid-generation
+    alloc can never fail and nothing is ever preempted; workloads that
+    EOS early (or simply haven't grown yet) leave reserved blocks idle.
+
 Greedy decode is row-independent (no cross-batch ops in the model), so
 a request admitted into a half-full decode batch produces bit-identical
 output to the same request served alone — batching, admission timing,
-and the arena/paged storage choice are all semantically inert
-(tests/test_server.py asserts this).
+preemption, and the arena/paged storage choice are all semantically
+inert (tests/test_server.py asserts this).
 """
 from __future__ import annotations
 
@@ -52,10 +83,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve.bucketing import bucket_length
+from repro.serve.bucketing import bucket_length, chunks_needed
 from repro.serve.paging import BlockAllocator, blocks_needed
 
 _PREFILL_FLOOR = 8      # smallest prompt bucket (keeps compile count tiny)
+_ADMIT_WATERMARK = 1    # spare blocks optimistic admission leaves free
 
 
 @dataclasses.dataclass
@@ -65,6 +97,13 @@ class Request:
     max_new_tokens: int
     eos_id: Optional[int] = None
     output: Optional[np.ndarray] = None
+    # preempt-and-recompute bookkeeping: tokens generated before the
+    # request was last evicted.  On re-admission they replay through
+    # the decode step to rebuild the KV bit-for-bit, and they are
+    # prepended to the final output; `prompt` and `max_new_tokens`
+    # keep their user-facing values throughout.
+    gen_prefix: List[int] = dataclasses.field(default_factory=list)
+    preemptions: int = 0
 
 
 # One jit wrapper per (model, entry point): engines over the same model
@@ -95,12 +134,23 @@ class Engine:
     cannot page (`engine.paged` reports the resolved mode).
     block_size / num_blocks / prefill_chunk size the pool (defaults:
     the arena's footprint, i.e. max_batch * capacity tokens of blocks).
+    preemption picks the paged admission policy — "recompute"
+    (optimistic, preempt-and-recompute under pressure; default) or
+    "reserve" (pessimistic worst-case reservation, never preempts);
+    the arena never preempts either way (a slot is a full reservation).
     """
 
     def __init__(self, model, params, *, max_batch: int = 8,
                  max_len: int = 256, cache_dtype=jnp.bfloat16, mesh=None,
                  paged: bool = False, block_size: int = 16,
-                 num_blocks: Optional[int] = None, prefill_chunk: int = 32):
+                 num_blocks: Optional[int] = None, prefill_chunk: int = 32,
+                 preemption: str = "recompute"):
+        if preemption not in ("recompute", "reserve"):
+            raise ValueError(
+                f"preemption must be 'recompute' or 'reserve', "
+                f"got {preemption!r}")
+        self.preemption = preemption
+        self.num_preemptions = 0    # total evictions (observability)
         if model.prefill_into_slot is None:
             raise NotImplementedError(
                 f"family {model.cfg.family!r} has no slot-arena entry points")
@@ -209,6 +259,9 @@ class Engine:
         self._next_uid = 0
         self._slot_req: List[Optional[Request]] = [None] * self.max_batch
         self._gen: List[List[int]] = [[] for _ in range(self.max_batch)]
+        # tokens a recomputed slot still has to re-insert through the
+        # decode step before it is live again (paged "recompute" only)
+        self._replay: List[List[int]] = [[] for _ in range(self.max_batch)]
         # held as int32 end-to-end: these feed the jitted step directly
         # (no per-step downcast)
         self._lengths = np.zeros(self.max_batch, np.int32)  # tokens in cache
@@ -240,8 +293,12 @@ class Engine:
     def _worst_case_blocks(self, plen: int, max_new: int) -> int:
         """Blocks a request can ever occupy: prefill writes `plen`
         entries and each decode step one more, so the cache peaks at
-        plen + max_new - 1 tokens (the final token is never inserted)."""
+        plen + max_new - 1 tokens (the final token is never inserted).
+        Invariant under preemption: folding k generated tokens into the
+        recompute prefill grows the prompt by k and shrinks the
+        remaining budget by k."""
         return blocks_needed(plen + max_new - 1, self.block_size)
+
 
     def _table_width(self, num_tokens: int) -> int:
         """Pow2-bucketed table columns covering `num_tokens` positions
@@ -322,14 +379,22 @@ class Engine:
     def _admit_paged(self, req: Request, slot: int) -> Optional[Request]:
         """Chunked prefill of `req` into pool blocks tracked by the
         slot's block table.  The caller already checked admissibility;
-        this allocates the prompt's blocks now and reserves the decode
-        worst case so lazy per-step allocation can never fail."""
-        plen = len(req.prompt)
-        need = self._worst_case_blocks(plen, req.max_new_tokens)
+        this allocates the (re-)prefill sequence's blocks now and, under
+        "reserve", also reserves the decode worst case so lazy per-step
+        allocation can never fail.  A recompute re-admission runs the
+        identical prompt prefill its first admission ran (same chunks,
+        same offsets, same pow2 table-width bucket — no new jit shapes,
+        host or mesh), then queues its generated-so-far tokens for
+        replay through the shared decode step."""
+        seq = req.prompt
+        plen = len(seq)
         n_prompt = blocks_needed(plen, self.block_size)
         blocks = self._allocator.alloc(n_prompt)
-        self._allocator.reserve(need - n_prompt)
-        self._slot_reserved[slot] = need - n_prompt
+        if self.preemption == "reserve":
+            need = self._worst_case_blocks(len(req.prompt),
+                                           req.max_new_tokens)
+            self._allocator.reserve(need - n_prompt)
+            self._slot_reserved[slot] = need - n_prompt
         self._tables[slot, :n_prompt] = blocks
         # slice the table to the prompt's bucketed width: chunk-pad
         # positions past it are routed to the null block by the scatter
@@ -338,13 +403,27 @@ class Engine:
         c = self.prefill_chunk
         self.prefill_shapes.add(c)
         logits = None
-        for off in range(0, plen, c):
-            chunk = req.prompt[off:off + c]
+        for i in range(chunks_needed(plen, c)):
+            chunk = seq[i * c:(i + 1) * c]
             toks = np.zeros((1, c), np.int32)
             toks[0, :len(chunk)] = chunk
             logits, self._caches = self._prefill(
                 self.params, jnp.asarray(toks), jnp.int32(len(chunk)),
-                jnp.int32(off), table, self._caches)
+                jnp.int32(i * c), table, self._caches)
+        if req.gen_prefix:
+            # resume, don't restart: the prompt KV is rebuilt (prefill
+            # logits discarded — argmax would just re-derive
+            # gen_prefix[0]) and the generated tokens are queued to
+            # replay through the decode step, each rewriting its KV
+            # entry with the same kernel that wrote it originally.
+            # After replay drains, state is bit-for-bit the state of an
+            # uninterrupted run at the eviction point.
+            self._slot_req[slot] = req
+            self._gen[slot] = []
+            self._lengths[slot] = plen
+            self._cur[slot] = req.gen_prefix[0]
+            self._replay[slot] = list(req.gen_prefix[1:])
+            return None
         return self._start_generation(req, slot, logits, plen)
 
     def _start_generation(self, req: Request, slot: int, logits,
@@ -354,22 +433,23 @@ class Engine:
         self._gen[slot] = [tok]
         self._lengths[slot] = plen
         self._cur[slot] = tok
-        if (req.max_new_tokens == 1
+        remaining = req.max_new_tokens - len(req.gen_prefix)
+        if (remaining == 1
                 or (req.eos_id is not None and tok == req.eos_id)):
             return self._finish(slot)
         return None
 
     def _finish(self, slot: int) -> Request:
         req = self._slot_req[slot]
-        req.output = np.asarray(self._gen[slot], np.int32)
+        req.output = np.asarray(req.gen_prefix + self._gen[slot], np.int32)
         self._slot_req[slot] = None
         self._gen[slot] = []
         if self.paged:
             # free the slot's blocks + any unused worst-case reservation
-            # (EOS before the budget); zero the table/length so the dead
-            # row only ever touches the null block
-            used = self._tables[slot][self._tables[slot] != 0]
-            self._allocator.release(used)
+            # (EOS before the budget; "recompute" never reserved); zero
+            # the table/length so the dead row only ever touches the
+            # null block
+            self._allocator.free_partial(self._tables[slot])
             self._allocator.unreserve(self._slot_reserved[slot])
             self._slot_reserved[slot] = 0
             self._tables[slot] = 0
@@ -377,12 +457,48 @@ class Engine:
         self._done.append(req)
         return req
 
+    def _preempt(self, slot: int) -> None:
+        """Evict the request running in `slot`: fold its generated
+        tokens into a recompute prefix, free its blocks, and re-queue it
+        in uid position.  Running uids are always lower than every
+        never-admitted queued uid (admission is strictly FIFO), so the
+        insertion point lies within the prefix of earlier evictees
+        still waiting at the head — the queue stays globally uid-sorted
+        and no request ever overtakes an older one."""
+        req = self._slot_req[slot]
+        req.gen_prefix.extend(self._gen[slot])
+        req.preemptions += 1
+        self.num_preemptions += 1
+        self._slot_req[slot] = None
+        self._gen[slot] = []
+        self._replay[slot] = []     # rebuilt from gen_prefix on re-admission
+        self._allocator.free_partial(self._tables[slot])
+        self._tables[slot] = 0
+        self._lengths[slot] = 0
+        self._cur[slot] = 0
+        i = 0
+        while i < len(self._queue) and self._queue[i].uid < req.uid:
+            i += 1
+        self._queue.insert(i, req)
+
     def _can_admit(self, req: Request) -> bool:
         if not self.paged:
             return True
-        return (self._allocator.available
-                >= self._worst_case_blocks(len(req.prompt),
-                                           req.max_new_tokens))
+        worst = self._worst_case_blocks(len(req.prompt), req.max_new_tokens)
+        if self.preemption == "reserve":
+            return self._allocator.available >= worst
+        # optimistic: admit against blocks free *right now* — the
+        # prompt's blocks, leaving a watermark of spare blocks so the
+        # first boundary crossing doesn't immediately trigger a
+        # preemption.  The watermark is waived when prompt + watermark
+        # would exceed the request's lifetime worst case (already
+        # bounded by the pool in submit()), else a pool-filling prompt
+        # with a tiny budget could never be admitted.
+        need_now = blocks_needed(len(req.prompt), self.block_size)
+        if need_now + _ADMIT_WATERMARK <= worst:
+            return self._allocator.can_allocate(need_now,
+                                                watermark=_ADMIT_WATERMARK)
+        return self._allocator.can_allocate(worst)
 
     def step(self) -> List[Request]:
         """Admit queued requests into free slots, then run ONE decode
@@ -390,7 +506,10 @@ class Engine:
 
         Admission is FIFO: when the queue head cannot be admitted yet
         (paged mode, not enough free blocks), later requests do not jump
-        it — finished requests free its blocks on subsequent steps."""
+        it — finished requests free its blocks on subsequent steps.
+        Preempted requests re-enter in uid position (ahead of every
+        never-admitted request), so eviction never lets a younger
+        request overtake an older one and the queue stays uid-sorted."""
         finished: List[Request] = []
         head_blocked = False
         for slot in range(self.max_batch):
@@ -411,15 +530,42 @@ class Engine:
         if not active:
             return finished
 
-        tokens = jnp.asarray(self._cur.reshape(-1, 1))
         if self.paged:
-            # top up the block covering this step's write position
-            for s in active:
+            # top up the block covering this step's write position.
+            # "reserve" draws on the admission earmark (cannot fail);
+            # "recompute" allocates oldest-first from the free list and,
+            # when the pool runs dry, preempts the newest admission
+            # (LIFO) until a block frees up — evicting a slot always
+            # returns >= 1 block, so the inner loop terminates, and the
+            # oldest running request is never the victim while a younger
+            # one holds blocks, so it monotonically progresses (no
+            # livelock: every request eventually becomes oldest).
+            for s in sorted(active, key=lambda t: self._slot_req[t].uid):
+                if self._slot_req[s] is None:
+                    continue        # preempted by an earlier top-up
                 bi = int(self._lengths[s]) // self.block_size
-                if self._tables[s, bi] == 0:
+                if self._tables[s, bi] != 0:
+                    continue
+                if self.preemption == "reserve":
                     (blk,) = self._allocator.alloc(1, reserved=True)
                     self._slot_reserved[s] -= 1
-                    self._tables[s, bi] = blk
+                else:
+                    while not self._allocator.can_allocate(1):
+                        victim = max(
+                            (t for t in range(self.max_batch)
+                             if self._slot_req[t] is not None),
+                            key=lambda t: self._slot_req[t].uid)
+                        self._preempt(victim)
+                        if victim == s:
+                            break
+                    if self._slot_req[s] is None:
+                        continue    # s itself was the newest admission
+                    (blk,) = self._allocator.alloc(1)
+                self._tables[s, bi] = blk
+            active = [s for s in active if self._slot_req[s] is not None]
+            if not active:
+                return finished
+            tokens = jnp.asarray(self._cur.reshape(-1, 1))
             # +1: the step inserts each live row's incoming token first
             w = self._table_width(max(int(self._lengths[s]) + 1
                                       for s in active))
@@ -428,17 +574,25 @@ class Engine:
                 jnp.asarray(self._tables[:, :w]),
                 jnp.asarray(self._lengths))
         else:
+            tokens = jnp.asarray(self._cur.reshape(-1, 1))
             positions = jnp.asarray(self._lengths)
             logits, self._caches = self._decode(self.params, tokens,
                                                 self._caches, positions)
         nxt = np.asarray(jnp.argmax(logits[:, -1], -1)).astype(np.int32)
         for s in active:
             self._lengths[s] += 1
+            if self._replay[s]:
+                # recompute replay: the step re-inserted one evicted
+                # token's KV; its logits argmax is the already-known
+                # next token, so feed that from the replay queue and
+                # skip emission/EOS/budget (all checked pre-eviction)
+                self._cur[s] = self._replay[s].pop(0)
+                continue
             tok = int(nxt[s])
             self._gen[s].append(tok)
             self._cur[s] = tok
             req = self._slot_req[s]
-            if (len(self._gen[s]) >= req.max_new_tokens
+            if (len(req.gen_prefix) + len(self._gen[s]) >= req.max_new_tokens
                     or (req.eos_id is not None and tok == req.eos_id)):
                 finished.append(self._finish(s))
         return finished

@@ -3,25 +3,35 @@
 The paged engine replaces the fixed-row slot arena with one shared pool
 of fixed-size KV blocks (`models.transformer.init_pool`: per-layer
 leaves `[layers, num_blocks + 1, block_size, ...]`).  This module owns
-the *host* half of that design: a free-list of block ids, worst-case
-reservation accounting so lazy per-step allocation can never fail
-mid-generation, and the block-table bookkeeping per slot.
+the *host* half of that design: a free-list of block ids, the
+block-table bookkeeping per slot, and the accounting both admission
+policies are built on.
 
 Block id 0 is reserved as the null/trash block: unallocated block-table
 entries point at it, masked-out writes are routed into it, and it is
 never attended to (the per-row validity length masks it out), so the
 allocator hands out ids 1..num_blocks.
 
-Allocation discipline (deadlock-free without preemption):
+The engine chooses between two allocation disciplines
+(`Engine(preemption=...)`):
 
-  * at admission the engine checks `available >= worst_case_blocks`,
+  * **"recompute"** (default, vLLM-style preempt-and-recompute):
+    admission is optimistic — it checks only that the *currently free*
+    blocks cover the prompt (`can_allocate`, with a one-block watermark
+    so the first decode boundary crossing does not immediately starve).
+    When a lazy per-step alloc would otherwise fail, the engine
+    preempts the newest running request (LIFO by admission order),
+    frees its blocks back to the pool (`free_partial`), and re-queues
+    it at the head for recompute.  No reservations are ever taken.
+
+  * **"reserve"** (pessimistic, deadlock-free without preemption):
+    at admission the engine checks `available >= worst_case_blocks`,
     allocates the prompt's blocks immediately, and `reserve()`s the
-    rest (the blocks decode will need later);
-  * each decode step that crosses a block boundary calls
-    `alloc(1, reserved=True)` — guaranteed to succeed because the
-    admission reservation already accounted for it;
-  * on finish the engine `release()`s the slot's blocks and drops any
-    unused reservation (EOS before the budget).
+    rest (the blocks decode will need later); each decode step that
+    crosses a block boundary calls `alloc(1, reserved=True)` —
+    guaranteed to succeed because the admission reservation already
+    accounted for it; on finish the engine frees the slot's blocks and
+    drops any unused reservation (EOS before the budget).
 """
 from __future__ import annotations
 
@@ -37,8 +47,9 @@ class BlockAllocator:
     """Free-list allocator over block ids 1..num_blocks (0 = null block).
 
     `available` subtracts outstanding reservations from the free count,
-    so admission against it guarantees every later reserved alloc
-    succeeds.
+    so "reserve"-mode admission against it guarantees every later
+    reserved alloc succeeds.  "recompute" mode never reserves and
+    queries `can_allocate` / `free_count` directly.
     """
 
     def __init__(self, num_blocks: int):
@@ -49,6 +60,7 @@ class BlockAllocator:
         self._free: List[int] = list(range(1, self.num_blocks + 1))
         self._free_set = set(self._free)
         self._reserved = 0
+        self._peak_in_use = 0
 
     @property
     def free_count(self) -> int:
@@ -59,6 +71,24 @@ class BlockAllocator:
     def available(self) -> int:
         """Blocks admissible right now: free minus outstanding reserves."""
         return len(self._free) - self._reserved
+
+    @property
+    def in_use(self) -> int:
+        """Blocks currently allocated to live requests."""
+        return self.num_blocks - len(self._free)
+
+    @property
+    def peak_in_use(self) -> int:
+        """High-water mark of `in_use` (pool-pressure observability:
+        how close the workload actually came to exhausting the pool)."""
+        return self._peak_in_use
+
+    def can_allocate(self, n: int, *, watermark: int = 0) -> bool:
+        """True when `n` blocks can be popped off the free list while
+        leaving at least `watermark` blocks still free.  This is the
+        optimistic-admission query: reservations are ignored (the
+        "recompute" policy never takes any)."""
+        return len(self._free) - int(watermark) >= n
 
     def reserve(self, n: int) -> None:
         """Earmark `n` free blocks for future reserved allocs."""
@@ -75,8 +105,9 @@ class BlockAllocator:
         """Pop `n` block ids off the free list.
 
         reserved=True consumes an earlier `reserve()` earmark (the
-        lazy decode-step path); reserved=False is the admission path
-        and must leave the earmarked blocks untouched."""
+        "reserve"-mode lazy decode-step path); reserved=False is the
+        admission path — and every "recompute"-mode alloc — and must
+        leave any earmarked blocks untouched."""
         if reserved:
             assert n <= self._reserved, (n, self._reserved)
             self._reserved -= n
@@ -85,13 +116,23 @@ class BlockAllocator:
         out = self._free[:n]
         del self._free[:n]
         self._free_set.difference_update(out)
+        self._peak_in_use = max(self._peak_in_use, self.in_use)
         return out
 
     def release(self, blocks) -> None:
-        """Return block ids to the free list (finish/abort path)."""
+        """Return block ids to the free list (finish/preempt path)."""
         for b in blocks:
             b = int(b)
             assert 1 <= b <= self.num_blocks, b
             assert b not in self._free_set, f"double free of block {b}"
             self._free.append(b)
             self._free_set.add(b)
+
+    def free_partial(self, blocks) -> int:
+        """Release the allocated (nonzero) ids out of a block-table row,
+        skipping null-block entries; returns how many were freed.  The
+        finish and preempt paths both hand the slot's whole table row
+        here — trailing entries still point at block 0."""
+        live = [int(b) for b in blocks if int(b) != 0]
+        self.release(live)
+        return len(live)

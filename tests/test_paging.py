@@ -61,3 +61,38 @@ def test_release_accepts_numpy_ids():
     got = a.alloc(2)
     a.release(np.asarray(got, np.int32))
     assert a.available == 3
+
+
+def test_can_allocate_ignores_reservations_and_honors_watermark():
+    """The optimistic-admission query ("recompute" policy): raw free
+    count, minus an optional watermark, regardless of earmarks."""
+    a = BlockAllocator(4)
+    a.reserve(3)                       # "reserve"-mode earmarks...
+    assert a.available == 1
+    assert a.can_allocate(4)           # ...don't gate optimistic admission
+    assert not a.can_allocate(5)
+    assert a.can_allocate(3, watermark=1)
+    assert not a.can_allocate(4, watermark=1)
+
+
+def test_free_partial_skips_null_entries():
+    """A block-table row hands back only its allocated (nonzero) ids —
+    the trailing null-block entries are not live blocks."""
+    a = BlockAllocator(4)
+    got = a.alloc(2)
+    row = np.zeros(6, np.int32)
+    row[:2] = got
+    assert a.free_partial(row) == 2
+    assert a.available == 4
+    assert a.free_partial(np.zeros(3, np.int32)) == 0   # all-null row
+
+
+def test_in_use_and_peak_watermark():
+    a = BlockAllocator(5)
+    assert a.in_use == 0 and a.peak_in_use == 0
+    got = a.alloc(3)
+    assert a.in_use == 3 and a.peak_in_use == 3
+    a.release(got[:2])
+    a.alloc(1)
+    assert a.in_use == 2
+    assert a.peak_in_use == 3          # high-water mark is sticky

@@ -314,25 +314,186 @@ def test_engine_paged_matches_arena_mixed_lengths(served):
 
 
 def test_engine_paged_admission_waits_for_blocks(served):
-    """FIFO under block scarcity: a pool with room for ~one live request
-    still drains a deeper queue (finished requests free their blocks,
-    the head is admitted next) and never deadlocks."""
+    """FIFO under block scarcity in "reserve" mode: a pool with room for
+    ~one live request still drains a deeper queue (finished requests
+    free their blocks, the head is admitted next), never deadlocks, and
+    never preempts."""
     cfg, model, params = served
     rng = np.random.default_rng(23)
     eng = Engine(model, params, max_batch=4, max_len=16, paged=True,
-                 block_size=8, num_blocks=4)     # 32 pooled tokens
+                 block_size=8, num_blocks=4,     # 32 pooled tokens
+                 preemption="reserve")
     reqs = [(rng.integers(0, cfg.vocab_size, (6,)), 12) for _ in range(3)]
     uids = [eng.submit(p, max_new_tokens=b) for p, b in reqs]
     eng.step()
     # worst case 3 blocks each: only one fits alongside another's reserve
     assert eng.num_active < 3 and eng.pending >= 1
     done = eng.run()
+    assert eng.num_preemptions == 0     # reserve mode never evicts
     assert sorted(r.uid for r in done) == sorted(uids)
     for (p, b), u in zip(reqs, uids):
         want = {r.uid: r.output for r in done}[u]
         ref_eng = Engine(model, params, max_batch=1, max_len=32)
         ref_eng.submit(p, max_new_tokens=b)
         np.testing.assert_array_equal(want, ref_eng.run()[0].output)
+
+
+# ---------------------------------------------------------------------------
+# preempt-and-recompute (paged, preemption="recompute")
+# ---------------------------------------------------------------------------
+
+
+def _drain_capped(eng, max_steps=600):
+    """run() with a step cap: a livelock fails the test instead of
+    hanging the suite."""
+    done = []
+    for _ in range(max_steps):
+        done.extend(eng.step())
+        if not (eng.pending or eng.num_active):
+            return done
+    raise AssertionError(
+        f"engine did not drain in {max_steps} steps "
+        f"(pending={eng.pending}, active={eng.num_active})")
+
+
+def test_engine_paged_preemption_bit_identity_gqa(served):
+    """Acceptance: a request that is preempted mid-generation and
+    recomputed produces a final token sequence bitwise identical to the
+    same request run unpreempted.  Pool sized so two hungry requests
+    cannot coexist at peak — optimistic admission takes both, then the
+    younger is evicted (LIFO) and recomputed."""
+    cfg, model, params = served
+    rng = np.random.default_rng(30)
+    pa = rng.integers(0, cfg.vocab_size, (8,))
+    pb = rng.integers(0, cfg.vocab_size, (8,))
+
+    refs = {}
+    for key, p in (("a", pa), ("b", pb)):
+        r = Engine(model, params, max_batch=2, max_len=32)
+        r.submit(p, max_new_tokens=20)
+        refs[key] = r.run()[0].output
+
+    # worst case 4 blocks each (8 + 20 - 1 = 27 tokens), pool holds 6:
+    # reserve would serialize, recompute admits both then evicts B
+    eng = Engine(model, params, max_batch=2, max_len=32, paged=True,
+                 block_size=8, num_blocks=6, prefill_chunk=4)
+    assert eng.paged and eng.preemption == "recompute"
+    ua = eng.submit(pa, max_new_tokens=20)
+    ub = eng.submit(pb, max_new_tokens=20)
+    outs = {r.uid: r for r in _drain_capped(eng)}
+    assert eng.num_preemptions >= 1
+    assert outs[ub].preemptions >= 1        # LIFO: the younger is evicted
+    assert outs[ua].preemptions == 0        # the older never is
+    np.testing.assert_array_equal(outs[ua].output, refs["a"])
+    np.testing.assert_array_equal(outs[ub].output, refs["b"])
+    assert eng.free_blocks == eng.num_blocks    # eviction leaked nothing
+
+
+def test_engine_paged_preemption_bit_identity_mla():
+    """Same acceptance bar on an MLA (latent-cache) config: recompute
+    prefill shares the paged path with GQA."""
+    from repro.configs.base import ArchConfig, MLAConfig
+    cfg = ArchConfig(name="mla-preempt-t", family="dense", source="test",
+                     num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+                     d_ff=128, vocab_size=256, tie_embeddings=True,
+                     mla=MLAConfig(kv_lora_rank=16, q_lora_rank=32,
+                                   qk_nope_head_dim=16, qk_rope_head_dim=8,
+                                   v_head_dim=16))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(6))
+    rng = np.random.default_rng(31)
+    pa = rng.integers(0, cfg.vocab_size, (6,))
+    pb = rng.integers(0, cfg.vocab_size, (6,))
+
+    refs = {}
+    for key, p in (("a", pa), ("b", pb)):
+        r = Engine(model, params, max_batch=2, max_len=32)
+        r.submit(p, max_new_tokens=15)
+        refs[key] = r.run()[0].output
+
+    eng = Engine(model, params, max_batch=2, max_len=32, paged=True,
+                 block_size=4, num_blocks=7, prefill_chunk=4)
+    assert eng.paged
+    ua = eng.submit(pa, max_new_tokens=15)  # worst 5 blocks each, pool 7
+    ub = eng.submit(pb, max_new_tokens=15)
+    outs = {r.uid: r for r in _drain_capped(eng)}
+    assert eng.num_preemptions >= 1 and outs[ub].preemptions >= 1
+    np.testing.assert_array_equal(outs[ua].output, refs["a"])
+    np.testing.assert_array_equal(outs[ub].output, refs["b"])
+    assert eng.free_blocks == eng.num_blocks
+
+
+def test_engine_paged_preemption_fifo_fairness(served):
+    """Never-preempted requests keep FIFO completion order under
+    pressure (equal budgets): eviction re-queues victims at the head,
+    so younger requests cannot overtake older ones."""
+    cfg, model, params = served
+    rng = np.random.default_rng(32)
+    eng = Engine(model, params, max_batch=3, max_len=32, paged=True,
+                 block_size=8, num_blocks=6, prefill_chunk=4)
+    reqs = [(rng.integers(0, cfg.vocab_size, (6,)), 14) for _ in range(5)]
+    uids = [eng.submit(p, max_new_tokens=b) for p, b in reqs]
+    done = _drain_capped(eng)
+    assert sorted(r.uid for r in done) == sorted(uids)
+    assert all(len(r.output) == 14 for r in done)   # no eos: full budgets
+    never_preempted = [r.uid for r in done if r.preemptions == 0]
+    assert never_preempted == sorted(never_preempted)
+    assert eng.num_preemptions >= 1     # the workload did apply pressure
+    assert eng.free_blocks == eng.num_blocks
+
+
+def test_engine_paged_preemption_queue_stays_uid_sorted(served):
+    """Eviction re-queues victims in uid position, so even when an
+    older evictee is already waiting (double-preemption cascades) the
+    queue never lets a younger request ahead of an older one."""
+    cfg, model, params = served
+    rng = np.random.default_rng(33)
+    eng = Engine(model, params, max_batch=3, max_len=32, paged=True,
+                 block_size=4, num_blocks=8, prefill_chunk=4)
+    uids = [eng.submit(rng.integers(0, cfg.vocab_size, (5,)),
+                       max_new_tokens=16) for _ in range(6)]
+    for _ in range(600):
+        eng.step()
+        qs = [r.uid for r in eng._queue]
+        assert qs == sorted(qs), f"queue out of uid order: {qs}"
+        if not (eng.pending or eng.num_active):
+            break
+    else:
+        raise AssertionError("engine did not drain")
+    assert eng.num_preemptions >= 2        # cascades actually happened
+    assert sorted(r.uid for r in eng._done) == sorted(uids)
+
+
+@property_sweep(num_cases=3, base_seed=300)
+def test_engine_paged_preemption_scarcity_sweep(rng):
+    """Property: random workloads on pools barely larger than one
+    request's worst case always drain (no deadlock/livelock — every
+    submitted request completes) with outputs matching a solo arena
+    run, and the pool ends fully free."""
+    cfg, model, params = _SHARED["served"]
+    plens = [int(rng.integers(2, 11)) for _ in range(5)]
+    budgets = [int(rng.integers(2, 9)) for _ in range(5)]
+    prompts = [rng.integers(0, cfg.vocab_size, (n,)) for n in plens]
+    worst_tokens = max(n + b - 1 for n, b in zip(plens, budgets))
+    eng = Engine(model, params, max_batch=3, max_len=32, paged=True,
+                 block_size=4, prefill_chunk=4,
+                 num_blocks=max(3, -(-worst_tokens // 4) + 1))
+    uids = [eng.submit(p, max_new_tokens=b)
+            for p, b in zip(prompts, budgets)]
+    outs = {r.uid: r.output for r in _drain_capped(eng)}
+    assert sorted(outs) == sorted(uids)
+    assert eng.free_blocks == eng.num_blocks
+    for p, b, u in zip(prompts, budgets, uids):
+        ref = Engine(model, params, max_batch=1, max_len=32)
+        ref.submit(p, max_new_tokens=b)
+        np.testing.assert_array_equal(outs[u], ref.run()[0].output)
+
+
+def test_engine_preemption_arg_validated(served):
+    cfg, model, params = served
+    with pytest.raises(ValueError, match="preemption"):
+        Engine(model, params, max_batch=2, max_len=16, paged=True,
+               preemption="swap")
 
 
 @pytest.mark.parametrize("arch,reason", [
