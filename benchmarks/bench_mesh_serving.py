@@ -1,0 +1,154 @@
+"""Mesh serving benchmark: admission cost vs decode step time on a real
+multi-process mesh, for BOTH the slot-arena and paged-KV backends.
+
+    PYTHONPATH=src python benchmarks/bench_mesh_serving.py \
+        [--quick] [--check] [--processes 2] [--out BENCH_mesh_serving.json]
+
+Each arm shells out to `repro.launch.serve_mesh`, which spawns
+`--processes` jax processes (gloo CPU collectives) sharing one
+("data", "model") mesh, runs the identical deterministic scheduler on
+every process, and cross-checks that all processes produced
+bit-identical outputs.  Process 0 reports `Engine.stats`, from which
+this script records the serving engine's host-loop split:
+
+  * **admission cost** — host time launching prefills plus the wait for
+    the admitted request's first token, per admission;
+  * **decode step time** — launch + fetch of one batched decode step.
+
+The ratio is the number the ROADMAP item asks for: how much of a
+decode-step budget an admission steals from in-flight requests.  The
+JSON also records the per-decode-step device→host transfer
+(`decode_fetch`): `[max_batch]` int32 greedy token ids — never
+`[B, 1, vocab]` logits, which on this mesh would be a model-sharded
+cross-host gather every step (the straggler convoy the paper warns
+about).  `--check` gates on completion, cross-process agreement
+(enforced by the driver), and the fetch being token-ids-not-logits.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
+
+
+def run_arm(args, paged: bool, tmp_out: str) -> dict:
+    cmd = [sys.executable, "-m", "repro.launch.serve_mesh",
+           "--processes", str(args.processes),
+           "--local-devices", str(args.local_devices),
+           "--model-parallel", str(args.model_parallel),
+           "--requests", str(args.requests),
+           "--max-batch", str(args.max_batch),
+           "--prompt-len", str(args.prompt_len),
+           "--new-tokens", str(args.new_tokens),
+           "--mixed",
+           "--timeout", str(args.timeout),
+           "--out", tmp_out]
+    if paged:
+        cmd += ["--paged", "--block-size", str(args.block_size)]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (SRC + os.pathsep + env["PYTHONPATH"]
+                         if env.get("PYTHONPATH") else SRC)
+    res = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                         timeout=args.timeout + 120, cwd=ROOT)
+    sys.stdout.write(res.stdout)
+    if res.returncode != 0:
+        sys.stdout.write(res.stderr)
+        raise RuntimeError(
+            f"serve_mesh {'paged' if paged else 'arena'} arm failed "
+            f"(rc {res.returncode})")
+    with open(tmp_out) as f:
+        arm = json.load(f)
+    arm["all_processes_bitwise_equal"] = True    # driver exits 1 otherwise
+    return arm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_mesh_serving.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="CPU CI mode: smaller workload")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless both backends complete the "
+                         "workload across all processes with a [B]-int32 "
+                         "per-decode-step fetch")
+    ap.add_argument("--processes", type=int, default=2)
+    ap.add_argument("--local-devices", type=int, default=2)
+    ap.add_argument("--model-parallel", type=int, default=2)
+    ap.add_argument("--max-batch", type=int, default=None,
+                    help="decode slots (default: 4 quick, 8 full)")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--timeout", type=int, default=600)
+    args = ap.parse_args()
+
+    args.requests = 6 if args.quick else 16
+    args.prompt_len = 8
+    args.new_tokens = 12 if args.quick else 32
+    if args.max_batch is None:
+        args.max_batch = 4 if args.quick else 8
+
+    results = {
+        "benchmark": "mesh_serving_admission_vs_decode",
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "num_processes": args.processes,
+        "quick": bool(args.quick),
+        "workload": {"requests": args.requests,
+                     "prompt_len": args.prompt_len,
+                     "new_tokens": args.new_tokens, "mixed": True,
+                     "max_batch": args.max_batch},
+    }
+    for key, paged in (("arena", False), ("paged", True)):
+        # absolute: the serve_mesh child runs with cwd=ROOT, which need
+        # not be the cwd this script (and its --out) resolves against
+        tmp = os.path.abspath(args.out) + f".{key}.tmp"
+        results[key] = run_arm(args, paged, tmp)
+        os.remove(tmp)
+        d = results[key]["derived"]
+        print(f"{key:6s}: admission {d['admission_ms_per_admission']:.2f} "
+              f"ms/req vs decode step {d['decode_step_ms']:.2f} ms "
+              f"(ratio {d['admission_over_decode_step']:.2f}); "
+              f"uploads/step {d['h2d_uploads_per_decode_step']:.2f}")
+
+    fetch = results["arena"]["engine_stats"]
+    results["decode_fetch"] = {
+        "elems": fetch["decode_fetch_elems"],
+        "dtype": fetch["decode_fetch_dtype"],
+        "bytes_per_step": fetch["decode_fetch_elems"] * 4,
+        "is_token_ids_not_logits":
+            fetch["decode_fetch_elems"] == args.max_batch
+            and fetch["decode_fetch_dtype"] == "int32",
+    }
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    print("wrote", args.out)
+
+    if args.check:
+        ok = results["decode_fetch"]["is_token_ids_not_logits"]
+        for key in ("arena", "paged"):
+            arm = results[key]
+            ok &= (arm["completed"] == args.requests
+                   and arm["num_processes"] == args.processes
+                   and arm["engine_stats"]["decode_fetch_elems"]
+                   == args.max_batch
+                   and arm["engine_stats"]["decode_fetch_dtype"] == "int32"
+                   and arm["derived"]["decode_step_ms"] > 0
+                   and arm["derived"]["admission_ms_per_admission"] > 0)
+        ok &= results["paged"]["backend"] == "paged"
+        ok &= results["arena"]["backend"] == "arena"
+        # free_blocks is None in arena mode (no pool — not "exhausted"),
+        # and a drained paged engine has returned every block
+        ok &= results["arena"]["free_blocks"] is None
+        ok &= (results["paged"]["free_blocks"]
+               == results["paged"]["num_blocks"])
+        if not ok:
+            print("FAIL: mesh serving bench invariants violated")
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

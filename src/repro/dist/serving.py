@@ -10,6 +10,8 @@ against abstract ShapeDtypeStructs without allocating 100B-scale params.
 """
 from __future__ import annotations
 
+import weakref
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -31,9 +33,19 @@ def serve_param_shardings(mesh, params_shapes):
         params_shapes)
 
 
+# eval_shape(model.init) traces the whole init; every builder needs the
+# result, and an Engine(mesh=...) calls two builders (four on the paged
+# backend via the token variants).  Memoized per model the same way
+# engine._shared_jit shares jit wrappers: weakly keyed so the cached
+# shapes die with the Model.
+_PARAM_SHAPES_CACHE = weakref.WeakKeyDictionary()
+
+
 def _param_shapes(model):
-    return jax.eval_shape(model.init,
-                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+    if model not in _PARAM_SHAPES_CACHE:
+        _PARAM_SHAPES_CACHE[model] = jax.eval_shape(
+            model.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return _PARAM_SHAPES_CACHE[model]
 
 
 def make_prefill_step(model, mesh, batch_shapes):
@@ -170,3 +182,113 @@ def make_decode_rows_paged_step(model, mesh, max_batch, pool_shapes):
         out_shardings=(None, c_sh),
         donate_argnums=(2,))    # update the pool in place
     return fn, (p_sh, t_sh, c_sh)
+
+
+# ---------------------------------------------------------------------------
+# token-returning steps (the builders the engine actually serves with)
+#
+# The builders above return full-vocab logits — on the mesh the vocab
+# dim is model-sharded, so fetching them is a cross-host gather every
+# decode step, and the host argmaxes them away anyway (greedy-only
+# engine).  These variants keep the argmax in the jitted step (XLA
+# reduces the sharded (value, index) pairs with the same lowest-index
+# tie-break as a host argmax over the gathered logits) and return
+# replicated int32 token ids — the per-step device->host transfer is
+# [B] int32, not [B, 1, vocab] floats.  Every small host-provided
+# operand (tokens, positions/lengths, block tables) is replicated:
+# that is what lets a *multi-process* engine pass plain numpy inputs
+# (jax only accepts host-local numpy for trivially-sharded args), and
+# the decode steps return advanced positions/lengths so steady-state
+# decoding feeds device outputs straight back in with no uploads at
+# all (`launch/serve_mesh.py` drives this across processes).
+# ---------------------------------------------------------------------------
+
+
+def make_slot_prefill_token_step(model, mesh, arena_shapes):
+    """Jitted admission prefill returning ([] int32 token, arena).
+
+    Signature: prefill(params, tokens, length, slot, caches)."""
+    p_sh = serve_param_shardings(mesh, _param_shapes(model))
+    c_sh = cache_shardings(mesh, arena_shapes)
+    repl = NamedSharding(mesh, P())
+    fn = jax.jit(
+        lambda params, tokens, length, slot, caches:
+            model.prefill_into_slot_token(params, tokens, length, slot,
+                                          caches),
+        in_shardings=(p_sh, repl, repl, repl, c_sh),
+        out_shardings=(repl, c_sh),
+        donate_argnums=(4,))
+    return fn, (p_sh, c_sh)
+
+
+def _row_tokens_sharding(mesh, max_batch):
+    """Internal sharding for the [B] decode-token vector: the data-axis
+    split the logits-returning steps used for their [B, 1] token input.
+    The jit *boundary* stays replicated (multi-process engines pass
+    identical numpy and read fully-replicated outputs locally), but
+    constraining the tokens to the historical layout right after entry
+    keeps GSPMD's partitioning — and therefore the ULP story of every
+    reduction — identical to the logits-returning steps, so near-tied
+    argmaxes do not flip relative to the pre-token-step engine."""
+    return batch_shardings(
+        mesh, {"t": jax.ShapeDtypeStruct((max_batch,), jnp.int32)},
+        batch_axes=data_axes(mesh))["t"]
+
+
+def make_decode_rows_token_step(model, mesh, max_batch, arena_shapes):
+    """Jitted arena decode returning ([B] int32 tokens, arena, pos + 1).
+
+    Signature: decode(params, tokens [B], caches, positions [B]).
+    tokens/positions replicate at the boundary (multi-process engines
+    feed identical host values, then device outputs), so the fetched
+    ids are fully-replicated and every process reads them locally."""
+    p_sh = serve_param_shardings(mesh, _param_shapes(model))
+    c_sh = cache_shardings(mesh, arena_shapes)
+    repl = NamedSharding(mesh, P())
+    t_in = _row_tokens_sharding(mesh, max_batch)
+    fn = jax.jit(
+        lambda params, tokens, caches, positions:
+            model.decode_rows_tokens(
+                params, jax.lax.with_sharding_constraint(tokens, t_in),
+                caches, positions),
+        in_shardings=(p_sh, repl, c_sh, repl),
+        out_shardings=(repl, c_sh, repl),
+        donate_argnums=(2,))
+    return fn, (p_sh, c_sh)
+
+
+def make_prefill_chunk_token_step(model, mesh, pool_shapes):
+    """Jitted chunked-prefill admission returning ([] int32 token, pool).
+
+    Signature: prefill(params, tokens, length, ctx_len, table, pool)."""
+    p_sh = serve_param_shardings(mesh, _param_shapes(model))
+    c_sh = pool_shardings(mesh, pool_shapes)
+    repl = NamedSharding(mesh, P())
+    fn = jax.jit(
+        lambda params, tokens, length, ctx_len, table, pool:
+            model.prefill_chunk_into_blocks_token(params, tokens, length,
+                                                  ctx_len, table, pool),
+        in_shardings=(p_sh, repl, repl, repl, repl, c_sh),
+        out_shardings=(repl, c_sh),
+        donate_argnums=(5,))
+    return fn, (p_sh, c_sh)
+
+
+def make_decode_rows_paged_token_step(model, mesh, max_batch, pool_shapes):
+    """Jitted paged decode returning ([B] int32 tokens, pool, len + 1).
+
+    Signature: decode(params, tokens [B], pool, tables [B, W],
+    lengths [B]); all small operands replicate at the boundary."""
+    p_sh = serve_param_shardings(mesh, _param_shapes(model))
+    c_sh = pool_shardings(mesh, pool_shapes)
+    repl = NamedSharding(mesh, P())
+    t_in = _row_tokens_sharding(mesh, max_batch)
+    fn = jax.jit(
+        lambda params, tokens, pool, tables, lengths:
+            model.decode_rows_paged_tokens(
+                params, jax.lax.with_sharding_constraint(tokens, t_in),
+                pool, tables, lengths),
+        in_shardings=(p_sh, repl, c_sh, repl, repl),
+        out_shardings=(repl, c_sh, repl),
+        donate_argnums=(2,))
+    return fn, (p_sh, c_sh)

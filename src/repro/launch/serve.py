@@ -23,6 +23,10 @@ A/B the schedulers on the same workload:
 Encoder-decoder families (whisper) and VLMs (whose prompts carry a
 patch prefix the engine's token-only submit cannot express yet) keep a
 hand-rolled prefill/decode loop.
+
+Multi-process mesh serving lives in `repro.launch.serve_mesh` (one
+engine per process over a shared ("data", "model") mesh, deterministic
+lockstep scheduling, per-step telemetry) — see docs/dist.md.
 """
 import argparse
 import os

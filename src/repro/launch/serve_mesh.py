@@ -1,0 +1,273 @@
+"""Multi-process mesh serving driver: one Engine, N host processes.
+
+    PYTHONPATH=src python -m repro.launch.serve_mesh \
+        --processes 2 --local-devices 2 --model-parallel 2 \
+        --requests 8 --max-batch 4 [--paged] [--out stats.json]
+
+Run with no `--process-id`, the script is the *parent*: it picks a free
+coordinator port, spawns `--processes` copies of itself (one jax
+process each, `--local-devices` forced host CPU devices per process —
+the `tests/dist_check_script.py` pattern, but across process
+boundaries), streams their output, and verifies every process computed
+the **identical** result (an output digest printed by each child must
+match across processes).  On real multi-host hardware the parent is the
+cluster launcher instead and each host runs the child entry point with
+its own `--process-id`.
+
+Every child process runs the *same deterministic scheduler*: the
+engine's host state is plain numpy advanced only by (a) the submitted
+workload, identical by construction (seeded), and (b) token ids fetched
+from **fully-replicated** device arrays, identical on every process by
+SPMD semantics.  No process ever communicates scheduling decisions —
+lockstep falls out of determinism, exactly like the superstep trainer.
+That only works because the engine's jitted steps return replicated
+`[B]` int32 token ids rather than model-sharded logits: each process
+reads its local copy, and the per-step device→host transfer is B * 4
+bytes regardless of vocab size or process count (`docs/dist.md`).
+
+The child reports `Engine.stats` (admission host time vs prefill wait
+vs decode step time, upload/fetch accounting, preemptions); process 0
+writes them to `--out` for `benchmarks/bench_mesh_serving.py`.
+
+CPU multi-process collectives use jax's gloo backend
+(`jax_cpu_collectives_implementation`); on TPU/GPU pods
+`jax.distributed.initialize` picks the native transport and the same
+child code runs unchanged.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import socket
+import subprocess
+import sys
+import time
+
+
+def _build_parser():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--processes", type=int, default=2)
+    ap.add_argument("--local-devices", type=int, default=2,
+                    help="forced host CPU devices per process")
+    ap.add_argument("--model-parallel", type=int, default=2,
+                    help='"model" mesh axis; the rest becomes "data"')
+    ap.add_argument("--arch", default="tiny",
+                    help='"tiny" (built-in bench config) or a smoke arch')
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--mixed", action="store_true",
+                    help="interleave short (new_tokens//4) and long budgets")
+    ap.add_argument("--paged", action="store_true")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--preemption", choices=("recompute", "reserve"),
+                    default="recompute")
+    ap.add_argument("--out", default=None,
+                    help="process 0 writes engine stats JSON here")
+    ap.add_argument("--timeout", type=int, default=600)
+    # internal (set by the parent when spawning children)
+    ap.add_argument("--process-id", type=int, default=None)
+    ap.add_argument("--coordinator", default=None)
+    return ap
+
+
+def _tiny_cfg():
+    from repro.configs.base import ArchConfig
+    return ArchConfig(name="mesh-serve-tiny", family="dense", source="bench",
+                      num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+                      head_dim=32, d_ff=256, vocab_size=512,
+                      tie_embeddings=True)
+
+
+def _workload(cfg, args):
+    import numpy as np
+    rng = np.random.default_rng(0)
+    short = max(1, args.new_tokens // 4)
+    return [(rng.integers(0, cfg.vocab_size, (args.prompt_len,)),
+             short if (args.mixed and i % 2 == 0) else args.new_tokens)
+            for i in range(args.requests)]
+
+
+def _digest(done):
+    h = hashlib.sha256()
+    for r in sorted(done, key=lambda r: r.uid):
+        h.update(f"{r.uid}:{r.output.tolist()}".encode())
+    return h.hexdigest()[:16]
+
+
+def run_child(args) -> int:
+    # env must be set before jax initializes a backend
+    os.environ.setdefault("TPU_SKIP_MDS_QUERY", "1")
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={args.local_devices} "
+        + os.environ.get("XLA_FLAGS", ""))
+    import jax
+    jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    jax.distributed.initialize(coordinator_address=args.coordinator,
+                               num_processes=args.processes,
+                               process_id=args.process_id)
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.configs import get_smoke
+    from repro.models import build_model
+    from repro.serve import Engine, bucket_length
+
+    pid = args.process_id
+    devs = np.array(jax.devices())
+    mp = args.model_parallel
+    assert devs.size % mp == 0, (devs.size, mp)
+    mesh = Mesh(devs.reshape(devs.size // mp, mp), ("data", "model"))
+    print(f"[proc {pid}] {jax.process_count()} processes, "
+          f"{devs.size} devices, mesh data={devs.size // mp} model={mp}",
+          flush=True)
+
+    cfg = _tiny_cfg() if args.arch == "tiny" else get_smoke(args.arch)
+    model = build_model(cfg)
+    # identical params on every process (same key, same CPU init);
+    # numpy leaves so Engine's device_put can lay them out across
+    # processes without cross-process resharding of a committed array
+    params = jax.tree.map(np.asarray, model.init(jax.random.PRNGKey(0)))
+
+    reqs = _workload(cfg, args)
+    max_len = bucket_length(args.prompt_len + args.new_tokens)
+    eng = Engine(model, params, max_batch=args.max_batch, max_len=max_len,
+                 mesh=mesh, paged=args.paged, block_size=args.block_size,
+                 preemption=args.preemption)
+    backend = "paged" if eng.paged else "arena"
+
+    # warm up compiles through the same engine (same prompt bucket; the
+    # workload's longest budget reaches every pow2 table-width bucket
+    # the timed runs can), then measure the workload as a stats delta
+    eng.submit(reqs[0][0], max_new_tokens=max(b for _, b in reqs))
+    eng.run()
+    eng._done.clear()
+    warm = eng.stats
+
+    t0 = time.perf_counter()
+    uids = [eng.submit(p, max_new_tokens=b) for p, b in reqs]
+    done = {r.uid: r for r in eng.run() if r.uid in set(uids)}
+    wall_s = time.perf_counter() - t0
+    stats = eng.stats
+    delta = {k: (stats[k] - warm[k]
+                 if isinstance(stats[k], (int, float))
+                 and not isinstance(stats[k], str) else stats[k])
+             for k in stats}
+    # gauges, not counters: report the live values
+    delta["decode_fetch_elems"] = stats["decode_fetch_elems"]
+    delta["decode_fetch_dtype"] = stats["decode_fetch_dtype"]
+
+    digest = _digest(done.values())
+    toks = sum(len(r.output) for r in done.values())
+    adm = max(delta["admissions"], 1)
+    dsteps = max(delta["decode_steps"], 1)
+    derived = {
+        "admit_host_ms_per_admission": 1e3 * delta["admit_host_s"] / adm,
+        "prefill_wait_ms_per_admission":
+            1e3 * delta["prefill_wait_s"] / adm,
+        "admission_ms_per_admission":
+            1e3 * (delta["admit_host_s"] + delta["prefill_wait_s"]) / adm,
+        "decode_step_ms": 1e3 * delta["decode_s"] / dsteps,
+        "admission_over_decode_step":
+            (delta["admit_host_s"] + delta["prefill_wait_s"]) / adm
+            / max(delta["decode_s"] / dsteps, 1e-12),
+        "h2d_uploads_per_decode_step": delta["h2d_uploads"] / dsteps,
+        "throughput_tok_s": toks / max(wall_s, 1e-12),
+    }
+    print(f"[proc {pid}] {backend}: {len(done)}/{len(uids)} requests, "
+          f"{toks} tokens in {wall_s:.2f}s; "
+          f"admission {derived['admission_ms_per_admission']:.2f} ms/req "
+          f"(host {derived['admit_host_ms_per_admission']:.2f} + wait "
+          f"{derived['prefill_wait_ms_per_admission']:.2f}), decode step "
+          f"{derived['decode_step_ms']:.2f} ms, fetch "
+          f"[{delta['decode_fetch_elems']}] {delta['decode_fetch_dtype']}",
+          flush=True)
+
+    if args.out and pid == 0:
+        payload = {
+            "backend": backend,
+            "num_processes": jax.process_count(),
+            "devices": int(devs.size),
+            "mesh": {"data": int(devs.size // mp), "model": int(mp)},
+            "arch": cfg.name,
+            "workload": {"requests": args.requests,
+                         "prompt_len": args.prompt_len,
+                         "new_tokens": args.new_tokens,
+                         "mixed": bool(args.mixed),
+                         "max_batch": args.max_batch,
+                         "preemption": args.preemption
+                         if backend == "paged" else None},
+            "completed": len(done),
+            "tokens": toks,
+            "wall_s": round(wall_s, 4),
+            # None in arena mode (no pool), block count in paged mode —
+            # a drained paged engine must have returned every block
+            "free_blocks": eng.free_blocks,
+            "num_blocks": eng.num_blocks if backend == "paged" else None,
+            "engine_stats": {k: (round(v, 6) if isinstance(v, float) else v)
+                             for k, v in delta.items()},
+            "derived": {k: round(v, 4) for k, v in derived.items()},
+            "output_digest": digest,
+        }
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"[proc {pid}] wrote {args.out}", flush=True)
+
+    # the parent asserts these digests agree across all processes
+    print(f"SERVE_MESH_OK process={pid} digest={digest}", flush=True)
+    return 0
+
+
+def run_parent(args, argv) -> int:
+    with socket.socket() as s:
+        s.bind(("localhost", 0))
+        port = s.getsockname()[1]
+    procs = []
+    for i in range(args.processes):
+        procs.append(subprocess.Popen(
+            [sys.executable, "-m", "repro.launch.serve_mesh", *argv,
+             "--process-id", str(i), "--coordinator", f"localhost:{port}"],
+            stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True))
+    outs, rcs = [], []
+    deadline = time.time() + args.timeout
+    for i, p in enumerate(procs):
+        try:
+            out, _ = p.communicate(timeout=max(1, deadline - time.time()))
+        except subprocess.TimeoutExpired:
+            for q in procs:
+                q.kill()
+            out, _ = p.communicate()
+            out += "\n[parent] TIMEOUT"
+        outs.append(out)
+        rcs.append(p.returncode)
+        for line in out.splitlines():
+            print(f"  p{i}| {line}")
+    digests = []
+    for out in outs:
+        digests += [ln.split("digest=")[1] for ln in out.splitlines()
+                    if ln.startswith("SERVE_MESH_OK")]
+    ok = (all(rc == 0 for rc in rcs)
+          and len(digests) == args.processes
+          and len(set(digests)) == 1)
+    if ok:
+        print(f"[parent] {args.processes} processes agree "
+              f"(digest {digests[0]})")
+        return 0
+    print(f"[parent] FAILED: rcs={rcs} digests={digests}")
+    return 1
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    args = _build_parser().parse_args(argv)
+    if args.process_id is not None:
+        sys.exit(run_child(args))
+    sys.exit(run_parent(args, argv))
+
+
+if __name__ == "__main__":
+    main()

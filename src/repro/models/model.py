@@ -40,6 +40,15 @@ class Model:
                                                 #  ctx_len, table, pool)
     decode_rows_paged: Callable = None  # (params, token, pool, tables,
                                         #  lengths)
+    # token-returning serving steps: greedy argmax folded into the jit so
+    # the host fetches [B]/[] int32 ids instead of full-vocab logits (on
+    # a mesh the vocab dim is model-sharded — logits fetch = cross-host
+    # gather per step).  The decode variants also return advanced
+    # positions/lengths for device-side feedback.
+    prefill_into_slot_token: Callable = None    # -> (tok [], arena)
+    decode_rows_tokens: Callable = None         # -> (toks [B], arena, pos+1)
+    prefill_chunk_into_blocks_token: Callable = None  # -> (tok [], pool)
+    decode_rows_paged_tokens: Callable = None   # -> (toks [B], pool, len+1)
 
 
 def build_model(cfg: ArchConfig, window: int = 0) -> Model:
@@ -76,6 +85,16 @@ def build_model(cfg: ArchConfig, window: int = 0) -> Model:
                                          table, pool),
         decode_rows_paged=lambda p, t, pool, tables, lengths:
             TF.decode_rows_paged(cfg, p, t, pool, tables, lengths),
+        prefill_into_slot_token=lambda p, tokens, length, slot, caches:
+            TF.prefill_into_slot_token(cfg, p, tokens, length, slot, caches,
+                                       window=window),
+        decode_rows_tokens=lambda p, t, c, pos: TF.decode_rows_tokens(
+            cfg, p, t, c, pos, window=window),
+        prefill_chunk_into_blocks_token=lambda p, tokens, length, ctx, table,
+            pool: TF.prefill_chunk_into_blocks_token(cfg, p, tokens, length,
+                                                     ctx, table, pool),
+        decode_rows_paged_tokens=lambda p, t, pool, tables, lengths:
+            TF.decode_rows_paged_tokens(cfg, p, t, pool, tables, lengths),
     )
 
 

@@ -461,6 +461,77 @@ def decode_rows(cfg, params, token, caches, positions, window=0):
 
 
 # ---------------------------------------------------------------------------
+# token-returning serving steps
+#
+# The serving engine is greedy-only, so the full-vocab logits the entry
+# points above return are pure device->host overhead: the host argmaxes
+# and throws them away.  On a mesh the cost is worse than bandwidth —
+# the vocab dim is model-sharded, so fetching logits is a cross-host
+# gather every decode step.  These variants fold the argmax into the
+# jitted step: the host receives int32 token ids ([] for batch-1
+# admission, [B] for the row-wise decode steps), and the decode steps
+# also return the advanced positions/lengths so steady-state decoding
+# feeds device outputs straight back in with no host->device uploads.
+# ---------------------------------------------------------------------------
+
+
+def _greedy_last(logits):
+    """argmax over the last position of batch-1 logits -> [] int32."""
+    return jnp.argmax(logits[0, -1], -1).astype(jnp.int32)
+
+
+def prefill_into_slot_token(cfg, params, tokens, length, slot, caches,
+                            window=0):
+    """`prefill_into_slot` returning ([] int32 greedy token, arena)."""
+    logits, caches = prefill_into_slot(cfg, params, tokens, length, slot,
+                                       caches, window=window)
+    return _greedy_last(logits), caches
+
+
+def decode_rows_tokens(cfg, params, tokens, caches, positions, window=0):
+    """`decode_rows` returning token ids and advanced positions.
+
+    tokens: [B] int32 (one incoming token per slot — the previous step's
+    output, so steady-state decode is a pure device-side feedback loop);
+    positions: int32 [B].  Returns (next [B] int32, new caches,
+    positions + 1).  Dead rows advance too; the engine re-uploads exact
+    host values whenever admission/finish/preemption touches a row."""
+    positions = jnp.asarray(positions, jnp.int32)
+    logits, caches = decode_rows(cfg, params, tokens[:, None], caches,
+                                 positions, window=window)
+    nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+    return nxt, caches, positions + 1
+
+
+def prefill_chunk_into_blocks_token(cfg, params, tokens, length, ctx_len,
+                                    block_table, pool):
+    """`prefill_chunk_into_blocks` returning ([] int32 token, pool).
+
+    The token is only meaningful for the prompt's final chunk (earlier
+    chunks' last positions are mid-prompt); computing it every chunk is
+    a vocab-length argmax, far cheaper than shipping logits."""
+    logits, pool = prefill_chunk_into_blocks(cfg, params, tokens, length,
+                                             ctx_len, block_table, pool)
+    return _greedy_last(logits), pool
+
+
+def decode_rows_paged_tokens(cfg, params, tokens, pool, block_tables,
+                             lengths):
+    """`decode_rows_paged` returning token ids and advanced lengths.
+
+    tokens: [B] int32; lengths: int32 [B].  Returns (next [B] int32,
+    new pool, lengths + 1).  Dead rows' lengths drift upward on device,
+    which is inert: their zeroed block tables route every gather and
+    scatter to the null block (out-of-range block indices clamp there
+    too), and the engine masks their tokens host-side."""
+    lengths = jnp.asarray(lengths, jnp.int32)
+    logits, pool = decode_rows_paged(cfg, params, tokens[:, None], pool,
+                                     block_tables, lengths)
+    nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+    return nxt, pool, lengths + 1
+
+
+# ---------------------------------------------------------------------------
 # paged-KV entry points (repro.serve block-pool continuous batching)
 #
 # The arena above dedicates a full capacity-T cache row to every slot; the

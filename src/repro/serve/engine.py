@@ -71,13 +71,37 @@ a request admitted into a half-full decode batch produces bit-identical
 output to the same request served alone — batching, admission timing,
 preemption, and the arena/paged storage choice are all semantically
 inert (tests/test_server.py asserts this).
+
+The host loop is built not to convoy behind the device (or, on a
+multi-process mesh, behind the slowest host — the straggler problem the
+paper is about):
+
+  * every jitted step is **token-returning**: greedy argmax runs inside
+    the jit and the per-decode-step device→host transfer is `[B]` int32
+    token ids, never `[B, 1, vocab]` logits (on a mesh the vocab dim is
+    model-sharded, so a logits fetch would be a cross-host gather every
+    step);
+  * admission launches a whole round of prefills back-to-back and only
+    then resolves their first tokens — no per-admission blocking sync
+    between launches;
+  * block tables / lengths / current tokens live in **device mirrors**:
+    the decode step returns advanced lengths and next tokens, which
+    feed straight back in, so steady-state decoding performs zero
+    host→device uploads (mirrors re-sync from host state only when
+    admission, finish, or preemption actually changes it).
+
+`Engine.stats` reports the split (admission host time vs prefill wait
+vs decode step time, upload/fetch counts, preemptions);
+`benchmarks/bench_mesh_serving.py` records it from a real 2-process
+run.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 import weakref
 from collections import deque
-from typing import Deque, List, Optional
+from typing import Deque, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -196,6 +220,10 @@ class Engine:
         # donation avoids a full arena/pool copy per step; CPU jax only
         # warns, so gate it on the backend.
         donate = jax.default_backend() != "cpu"
+        self._repl = None   # replicated sharding for mirrors (mesh only)
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            self._repl = NamedSharding(mesh, PartitionSpec())
         if self.paged:
             self.block_size = int(block_size)
             self.num_blocks = int(
@@ -215,41 +243,49 @@ class Engine:
             self._slot_reserved = [0] * self.max_batch
             if mesh is not None:
                 from repro.dist.serving import (
-                    make_decode_rows_paged_step, make_prefill_chunk_step)
+                    make_decode_rows_paged_token_step,
+                    make_prefill_chunk_token_step)
                 pool_shapes = jax.eval_shape(
                     lambda: model.init_pool(self.num_blocks, self.block_size,
                                             dtype=cache_dtype))
-                self._prefill, (_, c_sh) = make_prefill_chunk_step(
+                self._prefill, (p_sh, c_sh) = make_prefill_chunk_token_step(
                     model, mesh, pool_shapes)
-                self._decode, _ = make_decode_rows_paged_step(
+                self._decode, _ = make_decode_rows_paged_token_step(
                     model, mesh, self.max_batch, pool_shapes)
-                self._caches = jax.device_put(
-                    model.init_pool(self.num_blocks, self.block_size,
-                                    dtype=cache_dtype), c_sh)
+                self.params = jax.device_put(params, p_sh)
+                # jit the init so the pool materializes directly in its
+                # sharded layout — works multi-process (no cross-process
+                # device_put of a host-local buffer)
+                self._caches = jax.jit(
+                    lambda: model.init_pool(self.num_blocks, self.block_size,
+                                            dtype=cache_dtype),
+                    out_shardings=c_sh)()
             else:
                 self._prefill = _shared_jit(
-                    model, "prefill_chunk_into_blocks",
+                    model, "prefill_chunk_into_blocks_token",
                     donate_argnums=(5,) if donate else ())
                 self._decode = _shared_jit(
-                    model, "decode_rows_paged",
+                    model, "decode_rows_paged_tokens",
                     donate_argnums=(2,) if donate else ())
                 self._caches = model.init_pool(self.num_blocks,
                                                self.block_size,
                                                dtype=cache_dtype)
         elif mesh is not None:
-            from repro.dist.serving import (make_decode_rows_step,
-                                            make_slot_prefill_step)
-            self._prefill, (_, c_sh) = make_slot_prefill_step(
+            from repro.dist.serving import (make_decode_rows_token_step,
+                                            make_slot_prefill_token_step)
+            self._prefill, (p_sh, c_sh) = make_slot_prefill_token_step(
                 model, mesh, arena_shapes)
-            self._decode, _ = make_decode_rows_step(
+            self._decode, _ = make_decode_rows_token_step(
                 model, mesh, self.max_batch, arena_shapes)
-            self._caches = jax.device_put(
-                model.init_arena(self.max_batch, self.capacity,
-                                 dtype=cache_dtype), c_sh)
+            self.params = jax.device_put(params, p_sh)
+            self._caches = jax.jit(
+                lambda: model.init_arena(self.max_batch, self.capacity,
+                                         dtype=cache_dtype),
+                out_shardings=c_sh)()
         else:
-            self._prefill = _shared_jit(model, "prefill_into_slot",
+            self._prefill = _shared_jit(model, "prefill_into_slot_token",
                                         donate_argnums=(4,) if donate else ())
-            self._decode = _shared_jit(model, "decode_rows",
+            self._decode = _shared_jit(model, "decode_rows_tokens",
                                        donate_argnums=(2,) if donate else ())
             self._caches = model.init_arena(self.max_batch, self.capacity,
                                             dtype=cache_dtype)
@@ -266,6 +302,49 @@ class Engine:
         # (no per-step downcast)
         self._lengths = np.zeros(self.max_batch, np.int32)  # tokens in cache
         self._cur = np.zeros(self.max_batch, np.int32)      # current token
+
+        # device mirrors of the decode step's small operands.  The step
+        # returns next tokens and advanced lengths, which feed straight
+        # back in; host→device uploads happen only when host-side events
+        # (admission / finish / preempt / block top-up / replay) make
+        # the mirror stale — steady-state decode uploads nothing.
+        self._cur_dev = None
+        self._lengths_dev = None
+        self._tables_dev = None
+        self._tables_dev_w = -1      # width of the cached table slice
+        self._cur_dirty = True
+        self._lengths_dirty = True
+        self._tables_dirty = True
+        self._stats = {
+            "admissions": 0,         # requests prefilled into a slot
+            "admit_host_s": 0.0,     # host time launching admissions
+            "prefill_wait_s": 0.0,   # blocked resolving prefill tokens
+            "decode_steps": 0,
+            "decode_s": 0.0,         # decode launch + [B]-token fetch
+            "topup_host_s": 0.0,     # paged block top-up / eviction work
+            "replayed_tokens": 0,    # recompute replays (paged)
+            "h2d_uploads": 0,        # mirror re-syncs (stale → upload)
+            "decode_fetch_elems": 0,    # size of the per-step fetch …
+            "decode_fetch_dtype": "",   # … proof it is [B] int32 ids
+        }
+
+    @property
+    def stats(self) -> dict:
+        """Per-step telemetry: admission host time vs prefill wait vs
+        decode step time, mirror upload / token fetch accounting, and
+        preemption counts.  `decode_fetch_elems`/`decode_fetch_dtype`
+        record the actual per-decode-step device→host transfer (int32
+        token ids, one per slot — never logits)."""
+        return dict(self._stats, preemptions=self.num_preemptions)
+
+    def _put(self, x):
+        """Upload host state to a device mirror (replicated on a mesh —
+        identical on every process, so multi-process engines stay in
+        lockstep without communication)."""
+        self._stats["h2d_uploads"] += 1
+        if self._repl is not None:
+            return jax.device_put(x, self._repl)
+        return jax.device_put(x)
 
     @staticmethod
     def _min_ring(arena_shapes):
@@ -352,17 +431,21 @@ class Engine:
         return sum(r is not None for r in self._slot_req)
 
     @property
-    def free_blocks(self) -> int:
-        """Unallocated, unreserved pool blocks (paged mode only)."""
-        return self._allocator.available if self.paged else 0
+    def free_blocks(self) -> Optional[int]:
+        """Unallocated, unreserved pool blocks; None in arena mode —
+        the arena has no pool, and 0 would read as "pool exhausted"."""
+        return self._allocator.available if self.paged else None
 
     # ------------------------------------------------------------------
     # serving
     # ------------------------------------------------------------------
 
-    def _admit(self, req: Request, slot: int) -> Optional[Request]:
-        """Prefill `req` into `slot`; returns it if it finished already
-        (budget 1 or EOS on the first token)."""
+    def _admit(self, req: Request, slot: int):
+        """Launch the prefill of `req` into `slot` (non-blocking) and
+        mark the slot live.  Returns (req, slot, device token) for
+        `_resolve_admission` — the first token is NOT fetched here, so
+        the host can launch further admissions and the decode step
+        without convoying on this prefill."""
         plen = len(req.prompt)
         if self._pad_prompts:
             sp = min(bucket_length(plen, _PREFILL_FLOOR), self.capacity)
@@ -371,21 +454,26 @@ class Engine:
         self.prefill_shapes.add(sp)
         toks = np.zeros((1, sp), np.int32)
         toks[0, :plen] = req.prompt
-        logits, self._caches = self._prefill(
-            self.params, jnp.asarray(toks), jnp.int32(plen), jnp.int32(slot),
-            self._caches)
-        return self._start_generation(req, slot, logits, plen)
+        tok_dev, self._caches = self._prefill(
+            self.params, toks, np.int32(plen), np.int32(slot), self._caches)
+        self._slot_req[slot] = req
+        self._gen[slot] = []
+        self._lengths[slot] = plen
+        self._lengths_dirty = True
+        return req, slot, tok_dev
 
-    def _admit_paged(self, req: Request, slot: int) -> Optional[Request]:
+    def _admit_paged(self, req: Request, slot: int):
         """Chunked prefill of `req` into pool blocks tracked by the
-        slot's block table.  The caller already checked admissibility;
-        this allocates the (re-)prefill sequence's blocks now and, under
-        "reserve", also reserves the decode worst case so lazy per-step
-        allocation can never fail.  A recompute re-admission runs the
-        identical prompt prefill its first admission ran (same chunks,
-        same offsets, same pow2 table-width bucket — no new jit shapes,
-        host or mesh), then queues its generated-so-far tokens for
-        replay through the shared decode step."""
+        slot's block table (launches only — same contract as `_admit`).
+        The caller already checked admissibility; this allocates the
+        (re-)prefill sequence's blocks now and, under "reserve", also
+        reserves the decode worst case so lazy per-step allocation can
+        never fail.  A recompute re-admission runs the identical prompt
+        prefill its first admission ran (same chunks, same offsets,
+        same pow2 table-width bucket — no new jit shapes, host or
+        mesh), then queues its generated-so-far tokens for replay
+        through the shared decode step and returns None (its first
+        token is already known — nothing to resolve)."""
         seq = req.prompt
         plen = len(seq)
         n_prompt = blocks_needed(plen, self.block_size)
@@ -396,43 +484,46 @@ class Engine:
             self._allocator.reserve(need - n_prompt)
             self._slot_reserved[slot] = need - n_prompt
         self._tables[slot, :n_prompt] = blocks
+        self._tables_dirty = True
         # slice the table to the prompt's bucketed width: chunk-pad
         # positions past it are routed to the null block by the scatter
-        table = jnp.asarray(self._tables[slot, :self._table_width(plen)])
+        table = self._tables[slot, :self._table_width(plen)].copy()
 
         c = self.prefill_chunk
         self.prefill_shapes.add(c)
-        logits = None
+        tok_dev = None
         for i in range(chunks_needed(plen, c)):
             chunk = seq[i * c:(i + 1) * c]
             toks = np.zeros((1, c), np.int32)
             toks[0, :len(chunk)] = chunk
-            logits, self._caches = self._prefill(
-                self.params, jnp.asarray(toks), jnp.int32(len(chunk)),
-                jnp.int32(i * c), table, self._caches)
+            tok_dev, self._caches = self._prefill(
+                self.params, toks, np.int32(len(chunk)),
+                np.int32(i * c), table, self._caches)
+        self._slot_req[slot] = req
+        self._gen[slot] = []
+        self._lengths[slot] = plen
+        self._lengths_dirty = True
         if req.gen_prefix:
             # resume, don't restart: the prompt KV is rebuilt (prefill
-            # logits discarded — argmax would just re-derive
-            # gen_prefix[0]) and the generated tokens are queued to
-            # replay through the decode step, each rewriting its KV
-            # entry with the same kernel that wrote it originally.
-            # After replay drains, state is bit-for-bit the state of an
-            # uninterrupted run at the eviction point.
-            self._slot_req[slot] = req
-            self._gen[slot] = []
-            self._lengths[slot] = plen
+            # token discarded — it would just re-derive gen_prefix[0])
+            # and the generated tokens are queued to replay through the
+            # decode step, each rewriting its KV entry with the same
+            # kernel that wrote it originally.  After replay drains,
+            # state is bit-for-bit the state of an uninterrupted run at
+            # the eviction point.
             self._cur[slot] = req.gen_prefix[0]
+            self._cur_dirty = True
             self._replay[slot] = list(req.gen_prefix[1:])
             return None
-        return self._start_generation(req, slot, logits, plen)
+        return req, slot, tok_dev
 
-    def _start_generation(self, req: Request, slot: int, logits,
-                          plen: int) -> Optional[Request]:
-        tok = int(np.asarray(jnp.argmax(logits[0, -1])))
-        self._slot_req[slot] = req
+    def _resolve_admission(self, req: Request, slot: int,
+                           tok: int) -> Optional[Request]:
+        """Record a resolved first token; returns the request if it
+        finished already (budget 1 or EOS on the first token)."""
         self._gen[slot] = [tok]
-        self._lengths[slot] = plen
         self._cur[slot] = tok
+        self._cur_dirty = True
         remaining = req.max_new_tokens - len(req.gen_prefix)
         if (remaining == 1
                 or (req.eos_id is not None and tok == req.eos_id)):
@@ -454,6 +545,8 @@ class Engine:
             self._slot_reserved[slot] = 0
             self._tables[slot] = 0
             self._lengths[slot] = 0
+            self._tables_dirty = True
+            self._lengths_dirty = True
         self._done.append(req)
         return req
 
@@ -476,6 +569,9 @@ class Engine:
         self._tables[slot] = 0
         self._lengths[slot] = 0
         self._cur[slot] = 0
+        self._tables_dirty = True
+        self._lengths_dirty = True
+        self._cur_dirty = True
         i = 0
         while i < len(self._queue) and self._queue[i].uid < req.uid:
             i += 1
@@ -500,6 +596,45 @@ class Engine:
                                                 watermark=_ADMIT_WATERMARK)
         return self._allocator.can_allocate(worst)
 
+    def _admit_round(self, finished: List[Request]) -> bool:
+        """One admission round: launch a prefill into every admissible
+        free slot (back-to-back, no host sync between launches), then
+        resolve the launched first tokens in one batched pass.  Returns
+        True when anything was admitted — an instant finish (budget 1 /
+        EOS on the prefill token) frees its slot and blocks, so the
+        caller loops for another round."""
+        t0 = time.perf_counter()
+        pending: List[Tuple[Request, int, object]] = []
+        admitted = False
+        head_blocked = False
+        for slot in range(self.max_batch):
+            if head_blocked or not self._queue:
+                break
+            if self._slot_req[slot] is not None:
+                continue
+            if not self._can_admit(self._queue[0]):
+                head_blocked = True     # FIFO: nothing may jump the head
+                break
+            req = self._queue.popleft()
+            admit = self._admit_paged if self.paged else self._admit
+            pend = admit(req, slot)
+            admitted = True
+            self._stats["admissions"] += 1
+            if pend is not None:
+                pending.append(pend)
+        self._stats["admit_host_s"] += time.perf_counter() - t0
+        if pending:
+            # every prefill is already in flight; the first fetch waits
+            # on the first prefill while the rest keep computing
+            t1 = time.perf_counter()
+            toks = [int(np.asarray(tok_dev)) for _, _, tok_dev in pending]
+            self._stats["prefill_wait_s"] += time.perf_counter() - t1
+            for (req, slot, _), tok in zip(pending, toks):
+                f = self._resolve_admission(req, slot, tok)
+                if f is not None:
+                    finished.append(f)
+        return admitted
+
     def step(self) -> List[Request]:
         """Admit queued requests into free slots, then run ONE decode
         step over the batch; returns the requests finished by this step.
@@ -511,27 +646,20 @@ class Engine:
         never-admitted request), so eviction never lets a younger
         request overtake an older one and the queue stays uid-sorted."""
         finished: List[Request] = []
-        head_blocked = False
-        for slot in range(self.max_batch):
-            if head_blocked:
-                break
-            while self._slot_req[slot] is None and self._queue:
-                if not self._can_admit(self._queue[0]):
-                    head_blocked = True     # FIFO: nothing may jump it
-                    break
-                req = self._queue.popleft()
-                admit = self._admit_paged if self.paged else self._admit
-                f = admit(req, slot)
-                if f is not None:
-                    finished.append(f)
+        while self._admit_round(finished):
+            pass    # instant finishes free slots/blocks: try again
 
         active = [s for s in range(self.max_batch)
                   if self._slot_req[s] is not None]
         if not active:
             return finished
 
+        t0 = time.perf_counter()
         if self.paged:
-            # top up the block covering this step's write position.
+            # top up the block covering this step's write position
+            # (billed to topup_host_s, not decode_s — under pressure
+            # this loop runs the preemption machinery, which is host
+            # bookkeeping, not decode-step time).
             # "reserve" draws on the admission earmark (cannot fail);
             # "recompute" allocates oldest-first from the free list and,
             # when the pool runs dry, preempts the newest admission
@@ -562,31 +690,59 @@ class Engine:
                         continue    # s itself was the newest admission
                     (blk,) = self._allocator.alloc(1)
                 self._tables[s, bi] = blk
+                self._tables_dirty = True
+            self._stats["topup_host_s"] += time.perf_counter() - t0
+            t0 = time.perf_counter()
             active = [s for s in active if self._slot_req[s] is not None]
             if not active:
                 return finished
-            tokens = jnp.asarray(self._cur.reshape(-1, 1))
             # +1: the step inserts each live row's incoming token first
             w = self._table_width(max(int(self._lengths[s]) + 1
                                       for s in active))
-            logits, self._caches = self._decode(
-                self.params, tokens, self._caches,
-                jnp.asarray(self._tables[:, :w]),
-                jnp.asarray(self._lengths))
+            if self._tables_dirty or self._tables_dev_w != w:
+                self._tables_dev = self._put(
+                    np.ascontiguousarray(self._tables[:, :w]))
+                self._tables_dev_w = w
+                self._tables_dirty = False
+            if self._lengths_dirty or self._lengths_dev is None:
+                self._lengths_dev = self._put(self._lengths)
+                self._lengths_dirty = False
+            if self._cur_dirty or self._cur_dev is None:
+                self._cur_dev = self._put(self._cur)
+                self._cur_dirty = False
+            toks_dev, self._caches, self._lengths_dev = self._decode(
+                self.params, self._cur_dev, self._caches,
+                self._tables_dev, self._lengths_dev)
         else:
-            tokens = jnp.asarray(self._cur.reshape(-1, 1))
-            positions = jnp.asarray(self._lengths)
-            logits, self._caches = self._decode(self.params, tokens,
-                                                self._caches, positions)
-        nxt = np.asarray(jnp.argmax(logits[:, -1], -1)).astype(np.int32)
+            if self._lengths_dirty or self._lengths_dev is None:
+                self._lengths_dev = self._put(self._lengths)
+                self._lengths_dirty = False
+            if self._cur_dirty or self._cur_dev is None:
+                self._cur_dev = self._put(self._cur)
+                self._cur_dirty = False
+            toks_dev, self._caches, self._lengths_dev = self._decode(
+                self.params, self._cur_dev, self._caches, self._lengths_dev)
+        # the decode step's outputs ARE the next step's inputs: tokens
+        # and advanced lengths stay on device, and the only device→host
+        # traffic is this [B] int32 fetch (greedy ids — the full-vocab
+        # logits never leave the device, which on a mesh would be a
+        # model-sharded cross-host gather)
+        self._cur_dev = toks_dev
+        nxt = np.asarray(toks_dev)
+        self._stats["decode_steps"] += 1
+        self._stats["decode_s"] += time.perf_counter() - t0
+        self._stats["decode_fetch_elems"] = int(nxt.size)
+        self._stats["decode_fetch_dtype"] = str(nxt.dtype)
         for s in active:
             self._lengths[s] += 1
             if self._replay[s]:
                 # recompute replay: the step re-inserted one evicted
-                # token's KV; its logits argmax is the already-known
-                # next token, so feed that from the replay queue and
-                # skip emission/EOS/budget (all checked pre-eviction)
+                # token's KV; its argmax is the already-known next
+                # token, so feed that from the replay queue and skip
+                # emission/EOS/budget (all checked pre-eviction)
                 self._cur[s] = self._replay[s].pop(0)
+                self._cur_dirty = True
+                self._stats["replayed_tokens"] += 1
                 continue
             tok = int(nxt[s])
             self._gen[s].append(tok)

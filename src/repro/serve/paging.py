@@ -55,8 +55,9 @@ class BlockAllocator:
     def __init__(self, num_blocks: int):
         assert num_blocks >= 1, num_blocks
         self.num_blocks = int(num_blocks)
-        # FIFO free list: lowest ids first keeps tables reproducible;
-        # the mirror set makes the double-free guard O(1) per block
+        # sorted free list: lowest ids first (maintained by release())
+        # keeps tables reproducible across finish/preempt schedules; the
+        # mirror set makes the double-free guard O(1) per block
         self._free: List[int] = list(range(1, self.num_blocks + 1))
         self._free_set = set(self._free)
         self._reserved = 0
@@ -120,13 +121,19 @@ class BlockAllocator:
         return out
 
     def release(self, blocks) -> None:
-        """Return block ids to the free list (finish/preempt path)."""
+        """Return block ids to the free list (finish/preempt path).
+
+        The free list is re-sorted so allocation order stays "lowest ids
+        first" no matter what order requests finish or are preempted in
+        — block tables are then a function of the admission schedule
+        alone, not of which table row handed its blocks back first."""
         for b in blocks:
             b = int(b)
             assert 1 <= b <= self.num_blocks, b
             assert b not in self._free_set, f"double free of block {b}"
             self._free.append(b)
             self._free_set.add(b)
+        self._free.sort()
 
     def free_partial(self, blocks) -> int:
         """Release the allocated (nonzero) ids out of a block-table row,

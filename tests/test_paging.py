@@ -87,6 +87,23 @@ def test_free_partial_skips_null_entries():
     assert a.free_partial(np.zeros(3, np.int32)) == 0   # all-null row
 
 
+def test_release_restores_lowest_ids_first_order():
+    """The class docstring promises lowest-ids-first allocation; that
+    must survive releases in arbitrary (table) order — finish/preempt
+    hands back blocks in whatever order the table row holds them, and
+    the free list must re-sort so block tables stay reproducible
+    functions of the admission schedule alone."""
+    a = BlockAllocator(6)
+    assert a.alloc(4) == [1, 2, 3, 4]     # fresh pool: ascending
+    a.release([4, 2])                     # out-of-order finish …
+    a.free_partial(np.asarray([3, 0, 0], np.int32))   # … and preempt
+    assert a._free == sorted(a._free)     # invariant after every release
+    assert a.alloc(3) == [2, 3, 4]        # lowest ids first again
+    a.release([3, 2])
+    a.release([4])
+    assert a.alloc(5) == [2, 3, 4, 5, 6]
+
+
 def test_in_use_and_peak_watermark():
     a = BlockAllocator(5)
     assert a.in_use == 0 and a.peak_in_use == 0

@@ -1,0 +1,54 @@
+"""Multi-process mesh serving (launch/serve_mesh): a real 2-process run
+on CPU (gloo collectives, forced host devices per process) must drain
+the workload with every process computing bit-identical outputs, and
+the per-decode-step device→host transfer must be [max_batch] int32
+token ids — never model-sharded logits."""
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run_serve_mesh(tmp_path, extra):
+    out = tmp_path / "stats.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve_mesh",
+         "--processes", "2", "--local-devices", "2", "--model-parallel", "2",
+         "--requests", "3", "--max-batch", "2", "--prompt-len", "6",
+         "--new-tokens", "6", "--out", str(out), *extra],
+        env=env, capture_output=True, text=True, timeout=900, cwd=ROOT)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert res.stdout.count("SERVE_MESH_OK") == 2, res.stdout
+    digests = [ln.split("digest=")[1] for ln in res.stdout.splitlines()
+               if "SERVE_MESH_OK" in ln]
+    assert len(set(digests)) == 1, f"processes disagree: {digests}"
+    with open(out) as f:
+        return json.load(f)
+
+
+def test_two_process_arena_serving(tmp_path):
+    stats = _run_serve_mesh(tmp_path, [])
+    assert stats["backend"] == "arena"
+    assert stats["num_processes"] == 2
+    assert stats["completed"] == 3
+    es = stats["engine_stats"]
+    # the acceptance bar: per-decode-step fetch is [B] int32 token ids
+    assert es["decode_fetch_elems"] == 2 and es["decode_fetch_dtype"] == \
+        "int32", es
+    assert es["decode_steps"] > 0 and stats["derived"]["decode_step_ms"] > 0
+    assert stats["derived"]["admission_ms_per_admission"] > 0
+
+
+def test_two_process_paged_serving(tmp_path):
+    stats = _run_serve_mesh(tmp_path, ["--paged", "--block-size", "8"])
+    assert stats["backend"] == "paged"
+    assert stats["completed"] == 3
+    es = stats["engine_stats"]
+    assert es["decode_fetch_elems"] == 2 and es["decode_fetch_dtype"] == \
+        "int32", es
+    assert stats["derived"]["decode_step_ms"] > 0

@@ -27,7 +27,8 @@ def served():
 
 def test_wave_batching_drains_queue(served):
     cfg, model, params = served
-    srv = BatchedServer(model, params, max_batch=3)
+    with pytest.warns(DeprecationWarning, match="BatchedServer"):
+        srv = BatchedServer(model, params, max_batch=3)
     rng = np.random.default_rng(0)
     uids = [srv.submit(rng.integers(0, cfg.vocab_size, (int(n),)),
                        max_new_tokens=5)
@@ -48,11 +49,13 @@ def test_batched_decode_matches_solo_decode(served):
     a = rng.integers(0, cfg.vocab_size, (6,))
     b = rng.integers(0, cfg.vocab_size, (6,))
 
-    alone = BatchedServer(model, params, max_batch=1)
+    with pytest.warns(DeprecationWarning):
+        alone = BatchedServer(model, params, max_batch=1)
     alone.submit(a, max_new_tokens=4)
     ref = alone.run()[0].output
 
-    batched = BatchedServer(model, params, max_batch=2)
+    with pytest.warns(DeprecationWarning):
+        batched = BatchedServer(model, params, max_batch=2)
     uid = batched.submit(a, max_new_tokens=4)
     batched.submit(b, max_new_tokens=4)
     outs = {r.uid: r.output for r in batched.run()}
@@ -62,7 +65,8 @@ def test_batched_decode_matches_solo_decode(served):
 def test_mixed_lengths_bucket_into_waves(served):
     cfg, model, params = served
     rng = np.random.default_rng(3)
-    srv = BatchedServer(model, params, max_batch=4)
+    with pytest.warns(DeprecationWarning):
+        srv = BatchedServer(model, params, max_batch=4)
     lens = [4, 4, 7, 4, 7]
     uids = [srv.submit(rng.integers(0, cfg.vocab_size, (n,)),
                        max_new_tokens=3) for n in lens]
@@ -77,11 +81,13 @@ def test_eos_truncates(served):
     rng = np.random.default_rng(2)
     prompt = rng.integers(0, cfg.vocab_size, (6,))
     # find which token greedy decode emits first, then use it as "EOS"
-    probe = BatchedServer(model, params, max_batch=1)
+    with pytest.warns(DeprecationWarning):
+        probe = BatchedServer(model, params, max_batch=1)
     probe.submit(prompt, max_new_tokens=3)
     first_tok = int(probe.run()[0].output[0])
 
-    srv = BatchedServer(model, params, max_batch=1)
+    with pytest.warns(DeprecationWarning):
+        srv = BatchedServer(model, params, max_batch=1)
     srv.submit(prompt, max_new_tokens=10, eos_id=first_tok)
     out = srv.run()[0].output
     assert out[-1] == first_tok and len(out) <= 10
@@ -489,6 +495,65 @@ def test_engine_paged_preemption_scarcity_sweep(rng):
         np.testing.assert_array_equal(outs[u], ref.run()[0].output)
 
 
+def test_engine_preemption_during_replay_bit_identity(served):
+    """A slot evicted while it is still REPLAYING a previous eviction's
+    tokens (`_replay` non-empty) must re-admit cleanly: gen_prefix is
+    not duplicated (the interrupted replay contributed nothing to
+    `_gen`) and the final output is bitwise identical to an unpreempted
+    run.  Scenario: an older long request keeps crossing block
+    boundaries, so the younger request is evicted, re-admitted, and
+    evicted again before its replay drains."""
+    cfg, model, params = served
+    rng = np.random.default_rng(34)
+    pa = rng.integers(0, cfg.vocab_size, (4,))
+    pb = rng.integers(0, cfg.vocab_size, (4,))
+    budget = 24
+
+    refs = {}
+    for key, p in (("a", pa), ("b", pb)):
+        r = Engine(model, params, max_batch=1, max_len=32)
+        r.submit(p, max_new_tokens=budget)
+        refs[key] = r.run()[0].output
+
+    # worst case 7 blocks each (4 + 24 - 1 = 27 tokens / 4), pool 7:
+    # optimistic admission takes both, then A's growth repeatedly
+    # evicts B (LIFO) — including while B is mid-replay
+    eng = Engine(model, params, max_batch=2, max_len=32, paged=True,
+                 block_size=4, num_blocks=7, prefill_chunk=4)
+    assert eng.paged and eng.preemption == "recompute"
+    ua = eng.submit(pa, max_new_tokens=budget)
+    ub = eng.submit(pb, max_new_tokens=budget)
+
+    mid_replay_evictions = 0
+    done = []
+    for _ in range(600):
+        b_slot = next((s for s in range(eng.max_batch)
+                       if eng._slot_req[s] is not None
+                       and eng._slot_req[s].uid == ub), None)
+        b_replaying = b_slot is not None and bool(eng._replay[b_slot])
+        pre = eng.num_preemptions
+        done.extend(eng.step())
+        if b_replaying and eng.num_preemptions > pre \
+                and any(r.uid == ub for r in eng._queue):
+            mid_replay_evictions += 1
+        if not (eng.pending or eng.num_active):
+            break
+    else:
+        raise AssertionError("engine did not drain")
+
+    assert mid_replay_evictions >= 1, (
+        "scenario failed to evict a mid-replay slot; retune the pool")
+    outs = {r.uid: r for r in done}
+    assert outs[ub].preemptions >= 2
+    # no duplication: output length is exactly the budget …
+    assert len(outs[ua].output) == budget
+    assert len(outs[ub].output) == budget
+    # … and the tokens are bitwise those of an unpreempted run
+    np.testing.assert_array_equal(outs[ua].output, refs["a"])
+    np.testing.assert_array_equal(outs[ub].output, refs["b"])
+    assert eng.free_blocks == eng.num_blocks
+
+
 def test_engine_preemption_arg_validated(served):
     cfg, model, params = served
     with pytest.raises(ValueError, match="preemption"):
@@ -545,6 +610,69 @@ def test_bucketing_bounds_compiles(served):
     assert list(srv._engines) == [16]
     (eng,) = srv._engines.values()
     assert eng.prefill_shapes <= {8, 16}    # pow2 prompt buckets only
+
+
+# ---------------------------------------------------------------------------
+# token-returning steps + host-loop telemetry
+# ---------------------------------------------------------------------------
+
+
+def test_token_step_entry_points_return_ids_not_logits(served):
+    """The jitted serving steps must hand the host int32 token ids:
+    [B] for the row-wise decode steps (plus advanced positions/lengths
+    for the device feedback loop), [] for the batch-1 admission
+    prefills.  This is the per-step transfer contract the mesh engine
+    relies on — never [B, 1, vocab] logits."""
+    cfg, model, params = served
+    b, cap = 3, 32
+    arena = jax.eval_shape(lambda: model.init_arena(b, cap))
+    out = jax.eval_shape(
+        model.decode_rows_tokens,
+        jax.eval_shape(model.init, jax.ShapeDtypeStruct((2,), jnp.uint32)),
+        jax.ShapeDtypeStruct((b,), jnp.int32), arena,
+        jax.ShapeDtypeStruct((b,), jnp.int32))
+    toks, _, pos = out
+    assert toks.shape == (b,) and toks.dtype == jnp.int32
+    assert pos.shape == (b,) and pos.dtype == jnp.int32
+
+    pool = jax.eval_shape(lambda: model.init_pool(8, 8))
+    toks, _, lens = jax.eval_shape(
+        model.decode_rows_paged_tokens,
+        jax.eval_shape(model.init, jax.ShapeDtypeStruct((2,), jnp.uint32)),
+        jax.ShapeDtypeStruct((b,), jnp.int32), pool,
+        jax.ShapeDtypeStruct((b, 4), jnp.int32),
+        jax.ShapeDtypeStruct((b,), jnp.int32))
+    assert toks.shape == (b,) and toks.dtype == jnp.int32
+    assert lens.shape == (b,) and lens.dtype == jnp.int32
+
+
+def test_engine_stats_and_steady_state_uploads(served):
+    """Telemetry: the recorded per-decode-step fetch is [max_batch]
+    int32, and in steady-state decode (no admission / finish / block
+    boundary) the engine re-uploads NOTHING — tokens and lengths feed
+    back device-side, tables stay cached."""
+    cfg, model, params = served
+    rng = np.random.default_rng(40)
+    eng = Engine(model, params, max_batch=2, max_len=64, paged=True,
+                 block_size=32)          # one block covers the whole run
+    assert eng.paged
+    eng.submit(rng.integers(0, cfg.vocab_size, (4,)), max_new_tokens=12)
+    eng.step()                           # admission + first decode step
+    base = eng.stats
+    assert base["admissions"] == 1 and base["decode_steps"] == 1
+    assert base["decode_fetch_elems"] == 2      # [max_batch] ids ...
+    assert base["decode_fetch_dtype"] == "int32"    # ... not logits
+    assert base["admit_host_s"] > 0 and base["decode_s"] > 0
+    for _ in range(5):                   # steady state: same block, no events
+        eng.step()
+    after = eng.stats
+    assert after["decode_steps"] == 6
+    assert after["h2d_uploads"] == base["h2d_uploads"], (
+        "steady-state decode must not re-upload tables/lengths/tokens")
+    eng.run()
+    # arena engines have no pool: free_blocks must be None, not 0
+    assert Engine(model, params, max_batch=1, max_len=16).free_blocks is None
+    assert eng.free_blocks == eng.num_blocks
 
 
 # ---------------------------------------------------------------------------
