@@ -1,0 +1,187 @@
+"""Async-vs-lockstep API-BCD benchmark on a real multi-process runtime.
+
+    PYTHONPATH=src python benchmarks/bench_async_bcd.py \
+        [--quick] [--check] [--processes 2] [--out BENCH_async_bcd.json]
+
+Two arms, both shelled out to `repro.launch.train_async` (each spawns
+``--processes`` jax processes exchanging token-block updates through
+the jax.distributed coordination service), with process 1 slowed by
+``--straggle-factor`` (default 3x — every one of its updates is padded
+to 3x the nominal ``--min-update-ms`` floor):
+
+  * **lockstep** — ``--max-delay 0 --local-steps 1``: the synchronous
+    superstep baseline.  Every round, every process waits for the
+    straggler (the convoy the paper's asynchrony removes).
+  * **async** — ``--max-delay D --local-steps L --adaptive``: bounded
+    staleness plus speed-adapted update rates.  Fast processes take L
+    walk updates between syncs; the straggler syncs after
+    proportionally fewer, so nobody stalls.
+
+The async arm runs **twice** with the same seed to demonstrate digest
+reproducibility (the deterministic schedule makes seeded async runs
+bitwise repeatable even though wall-clock interleaving varies).
+
+Headline metric: wall-clock time for the async arm's shared estimate to
+reach the lockstep arm's **final** objective (read post-hoc from the
+merged per-process traces), and the speedup over the lockstep arm's
+full wall time.  The JSON also records comm-event counts for both arms.
+``--check`` gates on: async reached the lockstep-final objective, did
+so faster than lockstep, and the two async runs produced the same
+digest.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
+
+
+def run_arm(args, mode: str, tmp_out: str) -> dict:
+    cmd = [sys.executable, "-m", "repro.launch.train_async",
+           "--processes", str(args.processes),
+           "--agents", str(args.agents),
+           "--walks", str(args.walks),
+           "--subsample", str(args.subsample),
+           "--rounds", str(args.rounds),
+           "--straggle", f"1:{args.straggle_factor}",
+           "--min-update-ms", str(args.min_update_ms),
+           "--seed", str(args.seed),
+           "--timeout", str(args.timeout),
+           "--out", tmp_out]
+    if mode == "async":
+        cmd += ["--max-delay", str(args.max_delay),
+                "--local-steps", str(args.local_steps), "--adaptive"]
+    else:
+        cmd += ["--max-delay", "0", "--local-steps", "1"]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (SRC + os.pathsep + env["PYTHONPATH"]
+                         if env.get("PYTHONPATH") else SRC)
+    res = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                         timeout=args.timeout + 120, cwd=ROOT)
+    sys.stdout.write(res.stdout)
+    if res.returncode != 0:
+        sys.stderr.write(res.stdout)
+        raise SystemExit(f"{mode} arm failed (rc={res.returncode})")
+    with open(tmp_out) as f:
+        return json.load(f)
+
+
+def merged_trace(run: dict) -> list:
+    """All processes' sync records, ordered by wall-clock time."""
+    recs = [dict(r, proc=p["proc"]) for p in run["processes"]
+            for r in p["trace"]]
+    return sorted(recs, key=lambda r: r["wall_s"])
+
+
+def time_to_objective(run: dict, target: float):
+    """Earliest wall-clock time any process's replica hit the target."""
+    for rec in merged_trace(run):
+        if rec["objective"] <= target:
+            return rec["wall_s"]
+    return None
+
+
+def summarize(run: dict) -> dict:
+    return {
+        "wall_s": run["wall_s"],
+        "final_objective": run["final_objective"],
+        "total_updates": run["total_updates"],
+        "total_comm_events": run["total_comm_events"],
+        "max_staleness": run["max_staleness"],
+        "digest": run["digest"],
+        "per_process": [
+            {"proc": p["proc"], "speed": p["speed"],
+             "local_steps": p["local_steps"],
+             "own_updates": p["own_updates"],
+             "comm_events": p["comm_events"],
+             "gate_wait_s": p["gate_wait_s"], "wall_s": p["wall_s"]}
+            for p in run["processes"]],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--check", action="store_true")
+    ap.add_argument("--processes", type=int, default=2)
+    ap.add_argument("--agents", type=int, default=8)
+    ap.add_argument("--walks", type=int, default=2)
+    ap.add_argument("--subsample", type=int, default=1024)
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--local-steps", type=int, default=4)
+    ap.add_argument("--max-delay", type=int, default=4)
+    ap.add_argument("--straggle-factor", type=float, default=3.0)
+    ap.add_argument("--min-update-ms", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--timeout", type=int, default=600)
+    ap.add_argument("--out", default=os.path.join(ROOT,
+                                                  "BENCH_async_bcd.json"))
+    args = ap.parse_args()
+    if args.rounds is None:
+        args.rounds = 12 if args.quick else 40
+    if args.min_update_ms is None:
+        args.min_update_ms = 10.0 if args.quick else 20.0
+
+    with tempfile.TemporaryDirectory() as td:
+        print(f"== lockstep arm (max_delay=0, local_steps=1, "
+              f"straggler 1:{args.straggle_factor}x) ==")
+        lockstep = run_arm(args, "lockstep", os.path.join(td, "lock.json"))
+        print(f"== async arm (max_delay={args.max_delay}, "
+              f"local_steps={args.local_steps}, adaptive) ==")
+        async_a = run_arm(args, "async", os.path.join(td, "async_a.json"))
+        print("== async arm, repeat (digest reproducibility) ==")
+        async_b = run_arm(args, "async", os.path.join(td, "async_b.json"))
+
+    target = lockstep["final_objective"]
+    t_hit = time_to_objective(async_a, target)
+    speedup = (lockstep["wall_s"] / t_hit) if t_hit else None
+    payload = {
+        "benchmark": "async_bcd",
+        "config": {
+            "processes": args.processes, "agents": args.agents,
+            "walks": args.walks, "subsample": args.subsample,
+            "rounds": args.rounds, "local_steps": args.local_steps,
+            "max_delay": args.max_delay,
+            "straggle_factor": args.straggle_factor,
+            "min_update_ms": args.min_update_ms,
+            "seed": args.seed, "quick": args.quick,
+        },
+        "lockstep": summarize(lockstep),
+        "async": summarize(async_a),
+        "async_repeat_digest": async_b["digest"],
+        "digest_reproducible": async_a["digest"] == async_b["digest"],
+        "target_objective": target,
+        "async_time_to_target_s": t_hit,
+        "speedup_vs_lockstep": speedup,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"\nwrote {args.out}")
+    print(f"lockstep: wall {lockstep['wall_s']:.2f}s, "
+          f"final objective {target:.6f}, "
+          f"{lockstep['total_comm_events']} comm events")
+    print(f"async:    wall {async_a['wall_s']:.2f}s, "
+          f"target hit at {t_hit if t_hit is None else round(t_hit, 2)}s, "
+          f"{async_a['total_comm_events']} comm events, "
+          f"max staleness {async_a['max_staleness']}")
+    print(f"speedup to lockstep-final objective: "
+          f"{speedup if speedup is None else round(speedup, 2)}x; "
+          f"digest reproducible: {payload['digest_reproducible']}")
+
+    if args.check:
+        assert payload["digest_reproducible"], (
+            async_a["digest"], async_b["digest"])
+        assert t_hit is not None, "async never reached lockstep objective"
+        assert speedup > 1.0, (
+            f"async no faster than lockstep ({speedup:.2f}x)")
+        print("CHECK OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -139,37 +139,49 @@ class APIBCD(IncrementalMethod):
         self._prox = jax.jit(
             L.make_batched_prox_solver(problem, tau, num_walks, newton_steps))
 
-    def update(self, state: MethodState, agent: int, walk: int) -> MethodState:
+    def update(self, state: MethodState, agent: int, walk: int,
+               token_view: Optional[np.ndarray] = None) -> MethodState:
+        """One activation.  ``token_view`` (the staleness-aware entry
+        point used by `repro.dist.async_trainer`) is the [M, p] token
+        values the agent *receives* in step 3 — a possibly-stale replica
+        of the shared estimate.  ``None`` means zero delay (the agent
+        sees ``state.tokens``): passing a bitwise copy of
+        ``state.tokens`` is bitwise-equivalent to the default."""
         n = self.problem.num_agents
         s = state.copy()
-        s.zhat[agent, walk] = s.tokens[walk]            # step 3: receive token
+        view = s.tokens if token_view is None else np.asarray(token_view)
+        s.zhat[agent, walk] = view[walk]                # step 3: receive token
         z_sum = s.zhat[agent].sum(axis=0)
         x_old = s.xs[agent].copy()
         x_new = np.asarray(
             self._prox(agent, jnp.asarray(z_sum), jnp.asarray(x_old)))
         s.xs[agent] = x_new                              # (12a)
-        s.tokens[walk] = s.tokens[walk] + (x_new - x_old) / n   # (12b)
+        s.tokens[walk] = view[walk] + (x_new - x_old) / n       # (12b)
         s.zhat[agent, walk] = s.tokens[walk]             # (12c)
         s.iteration += 1
         return s
 
-    def update_fresh(self, state: MethodState, agent: int) -> MethodState:
+    def update_fresh(self, state: MethodState, agent: int,
+                     token_view: Optional[np.ndarray] = None) -> MethodState:
         """Fresh-token synchronous logical view — the setting of Theorem 2.
 
         All agents share fresh tokens (zhat_{i,m} = z_m for all i), and the
         incremental update (12b) is applied to every token m in M (as in the
         proof's identity (e), which requires z_m^{k+1} = mean_i x_i^{k+1}
         for all m). This is also the view the mesh runtime realizes.
+        ``token_view`` substitutes a possibly-stale received estimate for
+        ``state.tokens`` (delay-0 view is bitwise-equivalent to default).
         """
         n = self.problem.num_agents
         s = state.copy()
-        s.zhat[:] = s.tokens[None, :, :]
-        z_sum = s.tokens.sum(axis=0)
+        view = s.tokens if token_view is None else np.asarray(token_view)
+        s.zhat[:] = view[None, :, :]
+        z_sum = view.sum(axis=0)
         x_old = s.xs[agent].copy()
         x_new = np.asarray(
             self._prox(agent, jnp.asarray(z_sum), jnp.asarray(x_old)))
         s.xs[agent] = x_new
-        s.tokens = s.tokens + (x_new - x_old)[None, :] / n      # (12b) all m
+        s.tokens = view + (x_new - x_old)[None, :] / n          # (12b) all m
         s.zhat[:] = s.tokens[None, :, :]
         s.iteration += 1
         return s
@@ -200,31 +212,38 @@ class GAPIBCD(IncrementalMethod):
         self._grad = jax.jit(
             jax.grad(L.make_batched_local_loss(problem), argnums=1))
 
-    def update(self, state: MethodState, agent: int, walk: int) -> MethodState:
+    def update(self, state: MethodState, agent: int, walk: int,
+               token_view: Optional[np.ndarray] = None) -> MethodState:
+        """One activation; ``token_view`` as in `APIBCD.update` (the
+        possibly-stale received token values, default zero-delay)."""
         n, m = self.problem.num_agents, self.num_walks
         s = state.copy()
-        s.zhat[agent, walk] = s.tokens[walk]
+        view = s.tokens if token_view is None else np.asarray(token_view)
+        s.zhat[agent, walk] = view[walk]
         z_sum = s.zhat[agent].sum(axis=0)
         x_old = s.xs[agent].copy()
         g = np.asarray(self._grad(agent, jnp.asarray(x_old)))
         x_new = (self.rho * x_old - g + self.tau * z_sum) / (self.rho + self.tau * m)
         s.xs[agent] = x_new                              # (15) closed form
-        s.tokens[walk] = s.tokens[walk] + (x_new - x_old) / n
+        s.tokens[walk] = view[walk] + (x_new - x_old) / n
         s.zhat[agent, walk] = s.tokens[walk]
         s.iteration += 1
         return s
 
-    def update_fresh(self, state: MethodState, agent: int) -> MethodState:
-        """Fresh-token logical view for gAPI-BCD — the setting of Theorem 3."""
+    def update_fresh(self, state: MethodState, agent: int,
+                     token_view: Optional[np.ndarray] = None) -> MethodState:
+        """Fresh-token logical view for gAPI-BCD — the setting of Theorem 3.
+        ``token_view`` as in `APIBCD.update_fresh`."""
         n, m = self.problem.num_agents, self.num_walks
         s = state.copy()
-        s.zhat[:] = s.tokens[None, :, :]
-        z_sum = s.tokens.sum(axis=0)
+        view = s.tokens if token_view is None else np.asarray(token_view)
+        s.zhat[:] = view[None, :, :]
+        z_sum = view.sum(axis=0)
         x_old = s.xs[agent].copy()
         g = np.asarray(self._grad(agent, jnp.asarray(x_old)))
         x_new = (self.rho * x_old - g + self.tau * z_sum) / (self.rho + self.tau * m)
         s.xs[agent] = x_new
-        s.tokens = s.tokens + (x_new - x_old)[None, :] / n
+        s.tokens = view + (x_new - x_old)[None, :] / n
         s.zhat[:] = s.tokens[None, :, :]
         s.iteration += 1
         return s

@@ -1,19 +1,30 @@
 """repro.dist — the sharded API-BCD mesh runtime + batched serving.
 
-Four modules realize the paper's Algorithm 2 (gAPI-BCD variant, eq. 15 +
-12b) as an SPMD program over the ("agent", "replica", "model") mesh, plus
-the serving-side distribution plan and a host-level batched server:
+Modules realize the paper's Algorithm 2 as real multi-device /
+multi-process runtimes, plus the serving-side distribution plan and a
+host-level batched server:
 
-  sharding  — PartitionSpec inference (greedy divisible-dim assignment)
-              and the concrete sharding trees for train state, batches,
-              serving params and KV caches.
-  trainer   — init_train_state / make_train_step (the token-ring
-              superstep) / make_dp_baseline_step (all-reduce baseline).
-  serving   — prefill/decode step builders on the production mesh.
-  server    — BatchedServer: wave batching, EOS stop, per-request budgets.
+  sharding       — PartitionSpec inference (greedy divisible-dim
+                   assignment) and the concrete sharding trees for train
+                   state, batches, serving params and KV caches.
+  trainer        — init_train_state / make_train_step (the synchronous
+                   token-ring superstep — the fresh-token logical view of
+                   Theorems 2/3) / make_dp_baseline_step.
+  async_trainer  — the TRUE-async runtime: per-process event loops over
+                   sharded agents, bounded-staleness token exchange,
+                   adaptive update rates, straggler injection
+                   (`launch/train_async.py` drives it multi-process).
+  async_schedule — deterministic virtual-time schedules + the
+                   bounded-staleness gate (digest reproducibility).
+  async_comm     — block-update transports (jax.distributed coordination
+                   KV, file, in-memory).
+  serving        — prefill/decode step builders on the production mesh.
+  server         — BatchedServer: wave batching, EOS stop, budgets.
 
-The event-driven *asynchronous* semantics of Algorithm 2 live in
-`repro.core.simulator`; this package realizes the fresh-token synchronous
-logical view analyzed by Theorems 2/3 on real device meshes.
+The event-driven simulator of Algorithm 2's *cost model* lives in
+`repro.core.simulator`; `async_trainer` is where wall-clock asynchrony
+runs on a real multi-process runtime.
 """
-from repro.dist import server, serving, sharding, trainer  # noqa: F401
+from repro.dist import (  # noqa: F401
+    async_comm, async_schedule, async_trainer, server, serving, sharding,
+    trainer)

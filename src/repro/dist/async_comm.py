@@ -1,0 +1,151 @@
+"""Block-update exchange for the async trainer: versioned KV transports.
+
+The async runtime needs exactly three primitives — publish a block
+update under a unique key, block until a peer's update is available,
+and rendezvous at a start barrier.  Three interchangeable transports
+provide them:
+
+  * ``JaxCoordKV`` — the jax.distributed coordination service (the same
+    plumbing `launch/serve_mesh.py` initializes for multi-process
+    meshes: process 0 hosts the coordinator, every process connects via
+    `jax.distributed.initialize`).  `blocking_key_value_get_bytes` is a
+    server-side blocking wait, so the staleness gate costs no client
+    polling.  This is the transport real multi-process runs use.
+  * ``FileKV`` — a shared directory with atomic renames; gets poll.
+    Dependency-free fallback for environments where the coordination
+    service is unavailable, and for driving subprocess tests without a
+    jax.distributed handshake.
+  * ``DictKV`` — in-memory, condition-variable based; lets tests run
+    multiple async workers as threads inside one process.
+
+Values are pickled numpy payloads (tiny: one token-block delta is
+``[M, p]`` float64 — the paper's convex experiments put p in the tens).
+Every key is written at most once (``delta/<proc>/<round>``), which is
+what makes the deterministic global application order well defined.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import tempfile
+import threading
+import time
+from typing import Any
+
+
+class KVTimeout(TimeoutError):
+    """A blocking get ran past its deadline (straggler died or hung)."""
+
+
+def encode(obj: Any) -> bytes:
+    return pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+
+
+def decode(blob: bytes) -> Any:
+    return pickle.loads(blob)
+
+
+class DictKV:
+    """In-process KV for thread-based tests (one instance, many workers)."""
+
+    def __init__(self):
+        self._data = {}
+        self._cond = threading.Condition()
+
+    def set(self, key: str, value: bytes) -> None:
+        with self._cond:
+            assert key not in self._data, f"duplicate key {key}"
+            self._data[key] = bytes(value)
+            self._cond.notify_all()
+
+    def get(self, key: str, timeout_s: float) -> bytes:
+        deadline = time.monotonic() + timeout_s
+        with self._cond:
+            while key not in self._data:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0 or not self._cond.wait(timeout=remaining):
+                    if key in self._data:
+                        break
+                    raise KVTimeout(key)
+            return self._data[key]
+
+    def barrier(self, name: str, num_procs: int, proc: int,
+                timeout_s: float) -> None:
+        self.set(f"barrier/{name}/{proc}", b"1")
+        for q in range(num_procs):
+            self.get(f"barrier/{name}/{q}", timeout_s)
+
+
+class FileKV:
+    """Directory-backed KV: one file per key, atomic rename, polling get."""
+
+    def __init__(self, root: str, poll_s: float = 0.0005):
+        self.root = root
+        self.poll_s = poll_s
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, key.replace("/", "__"))
+
+    def set(self, key: str, value: bytes) -> None:
+        path = self._path(key)
+        fd, tmp = tempfile.mkstemp(dir=self.root)
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(value)
+            os.rename(tmp, path)   # atomic publish: readers never see partials
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    def get(self, key: str, timeout_s: float) -> bytes:
+        path = self._path(key)
+        deadline = time.monotonic() + timeout_s
+        while True:
+            try:
+                with open(path, "rb") as f:
+                    return f.read()
+            except FileNotFoundError:
+                if time.monotonic() > deadline:
+                    raise KVTimeout(key) from None
+                time.sleep(self.poll_s)
+
+    def barrier(self, name: str, num_procs: int, proc: int,
+                timeout_s: float) -> None:
+        self.set(f"barrier/{name}/{proc}", b"1")
+        for q in range(num_procs):
+            self.get(f"barrier/{name}/{q}", timeout_s)
+
+
+class JaxCoordKV:
+    """The jax.distributed coordination-service KV store.
+
+    Requires `jax.distributed.initialize(...)` to have run in this
+    process (as `launch/serve_mesh.py` / `launch/train_async.py` do);
+    the distributed client then exposes a cross-process KV with
+    server-side blocking gets and a named barrier.
+    """
+
+    def __init__(self):
+        from jax._src import distributed
+
+        client = distributed.global_state.client
+        assert client is not None, (
+            "jax.distributed.initialize() must run before JaxCoordKV")
+        self._client = client
+
+    def set(self, key: str, value: bytes) -> None:
+        self._client.key_value_set_bytes(key, bytes(value))
+
+    def get(self, key: str, timeout_s: float) -> bytes:
+        try:
+            return self._client.blocking_key_value_get_bytes(
+                key, int(timeout_s * 1000))
+        except Exception as e:    # XlaRuntimeError: deadline exceeded
+            raise KVTimeout(f"{key}: {e}") from e
+
+    def barrier(self, name: str, num_procs: int, proc: int,
+                timeout_s: float) -> None:
+        del num_procs, proc    # the coordinator knows the process set
+        self._client.wait_at_barrier(name, int(timeout_s * 1000))

@@ -1,0 +1,189 @@
+"""Deterministic schedules for the true-async API-BCD runtime.
+
+The async trainer (`repro.dist.async_trainer`) lets every process
+advance its token walks at its own rate — no global barrier — yet a
+seeded run must be digest-reproducible and cross-process-verifiable
+(the `launch/serve_mesh.py` discipline).  The trick is the same one the
+mesh serving driver uses, lifted from lockstep to *bounded asynchrony*:
+every process deterministically computes the SAME global order of sync
+events, and block updates are applied to the shared-estimate replica in
+that order, so nondeterministic wall-clock timing can never change the
+numerics — only how long things take.
+
+Two deterministic artifacts are built identically on every process from
+the run config alone:
+
+  * the **virtual-time event schedule** — a discrete-event simulation
+    of the run: process p's round r costs `local_steps_p * speed_p`
+    virtual units plus a communication charge, and the
+    **bounded-staleness gate** (`max_delay`) is folded into the virtual
+    start times (a process may not begin a round that would put it more
+    than `max_delay` rounds ahead of the slowest peer).  Sorting the
+    sync events by virtual completion time yields the global
+    application order, and per-event staleness/gating telemetry.
+    `max_delay=0` degenerates to the synchronous lockstep superstep
+    (BSP); `max_delay=None` removes the gate entirely.
+
+  * the per-process **walk sequence** — which (agent, walk) pair each
+    local update activates.  With one process this reproduces
+    `repro.core.driver.run_serial`'s round-robin exactly; with P
+    processes, each process runs the same pattern over its contiguous
+    agent shard.
+
+**Adaptive update rates** (straggler-resilient asynchrony, arXiv
+2306.06559 / 2307.07652): per-round local-walk counts scale with
+declared process speed so every process syncs at a common cadence —
+between two global syncs a fast process takes proportionally more
+local walks, and a straggler syncs after proportionally fewer instead
+of stalling the fleet; the staleness gate then stays open and each
+process contributes updates at its native rate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncEvent:
+    """One process finishing one round and exchanging block updates."""
+
+    index: int          # position in the global application order
+    proc: int           # process that produced the update
+    round: int          # 1-indexed round on that process
+    num_updates: int    # local walk updates folded into this delta
+    t_virtual: float    # virtual completion time (determines the order)
+    staleness: int      # rounds ahead of the slowest peer at round start
+    gated: bool         # True if the staleness gate delayed the start
+
+
+def agent_shard(num_agents: int, num_procs: int, proc: int) -> Tuple[int, int]:
+    """Contiguous [lo, hi) agent range owned by ``proc``.
+
+    Mirrors `np.array_split`: the first `num_agents % num_procs` shards
+    get one extra agent.
+    """
+    base, extra = divmod(num_agents, num_procs)
+    lo = proc * base + min(proc, extra)
+    return lo, lo + base + (1 if proc < extra else 0)
+
+
+def local_steps(base: int, speed: float, adaptive: bool) -> int:
+    """Walk updates per round for a process with cost multiplier ``speed``.
+
+    ``speed`` is the declared per-update cost multiplier (1.0 = nominal,
+    3.0 = a 3x straggler).  Adaptive mode equalizes sync cadence:
+    rounds take ~`base` nominal-units of work everywhere, so a straggler
+    batches fewer updates per sync and a fast process more.
+    """
+    if not adaptive:
+        return max(1, int(base))
+    return max(1, int(round(base / max(speed, 1e-9))))
+
+
+def build_schedule(
+    num_procs: int,
+    rounds: int,
+    base_local_steps: int,
+    speeds: Sequence[float],
+    max_delay: Optional[int],
+    adaptive: bool = False,
+    comm_cost: float = 1.0,
+) -> List[SyncEvent]:
+    """Discrete-event simulation of the gated async run.
+
+    Returns every process's sync events sorted by
+    ``(t_virtual, proc)`` — the global order in which block updates are
+    applied to the shared-estimate replica.  The bounded-staleness gate
+    is enforced *in virtual time*: process p may start round r only
+    once every peer has completed round ``r - 1 - max_delay`` (so no
+    process runs more than ``max_delay`` rounds ahead of the slowest);
+    the real runtime then realizes exactly this dependency structure by
+    blocking on earlier-ordered updates.
+    """
+    assert len(speeds) == num_procs, (len(speeds), num_procs)
+    assert rounds >= 1 and base_local_steps >= 1
+    if max_delay is not None:
+        assert max_delay >= 0, max_delay
+    steps = [local_steps(base_local_steps, s, adaptive) for s in speeds]
+
+    # t_end[p][r] = virtual completion time of process p's round r
+    # (1-indexed; round 0 is the common start at t=0).
+    t_end = [[0.0] * (rounds + 1) for _ in range(num_procs)]
+    t_begin = [[0.0] * (rounds + 1) for _ in range(num_procs)]
+    gated = [[False] * (rounds + 1) for _ in range(num_procs)]
+    for r in range(1, rounds + 1):
+        for p in range(num_procs):
+            t_start = t_end[p][r - 1]
+            if max_delay is not None:
+                need = r - 1 - max_delay   # peers must have completed this
+                if need >= 1 and num_procs > 1:
+                    gate = max(t_end[q][need]
+                               for q in range(num_procs) if q != p)
+                    if gate > t_start:
+                        t_start, gated[p][r] = gate, True
+            t_begin[p][r] = t_start
+            t_end[p][r] = t_start + steps[p] * speeds[p] + comm_cost
+
+    # Per-event staleness: rounds completed by p minus rounds completed
+    # by the slowest peer at p's (post-gate) round start.
+    def clock(q: int, t: float) -> int:
+        ends = t_end[q]
+        k = 0
+        while k + 1 <= rounds and ends[k + 1] <= t:
+            k += 1
+        return k
+
+    events = []
+    for p in range(num_procs):
+        for r in range(1, rounds + 1):
+            start = t_begin[p][r]
+            slowest = min(clock(q, start)
+                          for q in range(num_procs) if q != p) \
+                if num_procs > 1 else r - 1
+            events.append((t_end[p][r], p, r, steps[p],
+                           max(0, (r - 1) - slowest), gated[p][r]))
+    events.sort(key=lambda e: (e[0], e[1]))
+    return [SyncEvent(index=i, proc=p, round=r, num_updates=n,
+                      t_virtual=t, staleness=st, gated=g)
+            for i, (t, p, r, n, st, g) in enumerate(events)]
+
+
+def walk_sequence(
+    num_agents: int,
+    num_procs: int,
+    proc: int,
+    num_walks: int,
+    num_steps: int,
+    kind: str = "cyclic",
+    seed: int = 0,
+) -> List[Tuple[int, int]]:
+    """The (agent, walk) activation sequence for one process.
+
+    Walks round-robin (update j drives walk ``j % num_walks``), and each
+    walk visits the process's agent shard in ring order from evenly
+    spread start offsets — for ``num_procs == 1`` this is bit-for-bit
+    the interleaving of `repro.core.driver.run_serial` with
+    `CyclicWalk`s.  ``kind="random"`` draws the next agent uniformly
+    from the shard instead (seeded per (seed, proc): deterministic, but
+    exercising irregular visit patterns).
+    """
+    import numpy as np
+
+    lo, hi = agent_shard(num_agents, num_procs, proc)
+    width = hi - lo
+    assert width >= 1, f"process {proc} owns no agents ({num_agents} agents, {num_procs} procs)"
+    rng = np.random.default_rng((seed, proc))
+    pos = [lo + (w * width) // num_walks for w in range(num_walks)]
+    seq = []
+    for j in range(num_steps):
+        w = j % num_walks
+        agent = pos[w]
+        if kind == "cyclic":
+            pos[w] = lo + ((pos[w] - lo + 1) % width)
+        elif kind == "random":
+            pos[w] = lo + int(rng.integers(0, width))
+        else:
+            raise ValueError(kind)
+        seq.append((agent, w))
+    return seq

@@ -1,0 +1,291 @@
+"""True-async API-BCD: a multi-process asynchronous trainer.
+
+`repro.dist.trainer` runs the gAPI-BCD superstep as synchronous SPMD
+lockstep with active-agent masking — it *simulates* asynchrony without
+exercising it.  This module is the real thing: each process owns a
+contiguous shard of agents and advances its token walks at its *own*
+rate, with no global barrier, exchanging token-block updates through a
+KV transport (`repro.dist.async_comm`) and applying
+`APIBCD.update` / `update_fresh` against a possibly-stale replica of
+the shared token estimate.
+
+Execution model (per process):
+
+  1. Run ``local_steps`` walk activations against the local token view
+     (`MethodState.tokens` — the stale replica plus the process's own
+     uncommunicated deltas).  Each activation is one Alg. 2 step
+     (`repro.core.methods`); a straggler-injection hook pads every
+     update to ``min_update_s * speed``.
+  2. Publish the round's accumulated token delta (eq. 12b credits are
+     additive, so lump deltas commute across processes) under
+     ``delta/<proc>/<round>``.
+  3. Apply every peer delta ordered before this sync in the
+     deterministic global order (`repro.dist.async_schedule`) to the
+     local replica — **blocking until available**.  This realizes the
+     bounded-staleness gate: the schedule places a process's round
+     start no more than ``max_delay`` rounds ahead of the slowest peer,
+     so a runner-ahead blocks here exactly when the gate requires.
+     ``max_delay=0`` degenerates to the synchronous lockstep superstep.
+  4. Pull: reset the working view to the replica and continue.
+
+Every process applies the same lump deltas in the same order, so the
+shared-estimate replica — and therefore the run digest — is bitwise
+identical across processes and across repeats of a seeded run, while
+wall-clock behaviour (the thing the paper's Fig.-style comparisons
+measure) remains genuinely asynchronous.  `launch/train_async.py`
+drives one worker per jax process; `benchmarks/bench_async_bcd.py`
+benchmarks lockstep vs async arms with an injected straggler.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import losses as L
+from repro.core.methods import IncrementalMethod
+from repro.dist.async_comm import decode as _dec_blob
+from repro.dist.async_comm import encode as _enc_blob
+from repro.dist.async_schedule import (
+    agent_shard, build_schedule, walk_sequence)
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncBCDConfig:
+    """Run configuration — identical on every process (it seeds the
+    deterministic schedule, so any divergence breaks the digest)."""
+
+    num_procs: int
+    num_agents: int
+    num_walks: int
+    rounds: int                      # sync rounds per process
+    local_steps: int = 1             # walk updates per round (base)
+    max_delay: Optional[int] = 0     # staleness bound; None = unbounded
+    adaptive: bool = False           # speed-adapted per-round step counts
+    speeds: Sequence[float] = ()     # per-process cost multipliers
+    rule: str = "walk"               # "walk" (Alg. 2) | "fresh" (Thm 2 view)
+    walk_kind: str = "cyclic"        # "cyclic" | "random"
+    min_update_s: float = 0.0        # per-update duration floor (nominal)
+    seed: int = 0
+    comm_timeout_s: float = 600.0
+
+    def resolved_speeds(self) -> List[float]:
+        s = list(self.speeds) or [1.0] * self.num_procs
+        assert len(s) == self.num_procs, (s, self.num_procs)
+        return [float(v) for v in s]
+
+
+@dataclasses.dataclass
+class AsyncResult:
+    proc: int
+    digest: str                  # shared-estimate digest (cross-process)
+    trace: List[dict]            # per-sync telemetry + objective
+    tokens: np.ndarray           # final shared tokens [M, p] (all events)
+    xs_local: np.ndarray         # final local models [hi-lo, p]
+    agent_range: tuple
+    own_updates: int
+    applied_updates: int
+    comm_posts: int
+    comm_fetches: int
+    gate_wait_s: float
+    wall_s: float
+    max_staleness: int
+
+
+def consensus_estimate(tokens: np.ndarray, rule: str) -> np.ndarray:
+    """Global model estimate from the shared tokens.
+
+    Physical walk updates credit each delta to exactly one token, so
+    ``sum_m z_m`` tracks ``mean_i x_i`` (eq. 12b invariant); the fresh
+    logical view credits every token, so each token IS the estimate.
+    """
+    return tokens.sum(axis=0) if rule == "walk" else tokens.mean(axis=0)
+
+
+class AsyncWorker:
+    """One process's event loop.  ``kv`` is any `async_comm` transport."""
+
+    def __init__(self, cfg: AsyncBCDConfig, method: IncrementalMethod,
+                 proc: int, kv):
+        assert method.num_walks == cfg.num_walks, (
+            method.num_walks, cfg.num_walks)
+        assert cfg.rule in ("walk", "fresh"), cfg.rule
+        self.cfg = cfg
+        self.method = method
+        self.proc = proc
+        self.kv = kv
+        self.speeds = cfg.resolved_speeds()
+        self.events = build_schedule(
+            cfg.num_procs, cfg.rounds, cfg.local_steps, self.speeds,
+            cfg.max_delay, adaptive=cfg.adaptive)
+        self.my_events = [e for e in self.events if e.proc == proc]
+        total_steps = sum(e.num_updates for e in self.my_events)
+        self.sequence = walk_sequence(
+            cfg.num_agents, cfg.num_procs, proc, cfg.num_walks,
+            total_steps, kind=cfg.walk_kind, seed=cfg.seed)
+
+    # -- one local activation -------------------------------------------------
+
+    def _apply_update(self, state, agent: int, walk: int):
+        if self.cfg.rule == "walk":
+            return self.method.update(state, agent, walk)
+        return self.method.update_fresh(state, agent)
+
+    def _delta_key(self, proc: int, rnd: int) -> str:
+        return f"delta/{proc}/{rnd}"
+
+    # -- the event loop -------------------------------------------------------
+
+    def run(self) -> AsyncResult:
+        cfg = self.cfg
+        speed = self.speeds[self.proc]
+        floor_s = cfg.min_update_s * speed    # straggler-injection hook
+
+        state = self.method.init()
+        # warm the jitted solver before the start barrier so compile
+        # time never pollutes the wall-clock comparison (the result is
+        # discarded; update() copies its input state)
+        agent0, walk0 = self.sequence[0]
+        self._apply_update(state, agent0, walk0)
+
+        z_rep = state.tokens.copy()       # applied global prefix (replica)
+        pulled = state.tokens.copy()      # view at last pull
+        cursor = 0                        # next global event to apply
+        step_iter = iter(self.sequence)
+        trace: List[dict] = []
+        own_updates = applied_updates = 0
+        comm_posts = comm_fetches = 0
+        gate_wait_s = 0.0
+        max_staleness = 0
+
+        self.kv.barrier("async-bcd-start", cfg.num_procs, self.proc,
+                        cfg.comm_timeout_s)
+        t0 = time.monotonic()
+
+        for ev in self.my_events:
+            for _ in range(ev.num_updates):
+                t_u = time.monotonic()
+                agent, walk = next(step_iter)
+                state = self._apply_update(state, agent, walk)
+                own_updates += 1
+                if floor_s > 0.0:
+                    pad = floor_s - (time.monotonic() - t_u)
+                    if pad > 0:
+                        time.sleep(pad)
+
+            # publish this round's block update (lump delta since pull)
+            delta = state.tokens - pulled
+            self.kv.set(self._delta_key(self.proc, ev.round), _enc(delta))
+            comm_posts += 1
+
+            # staleness gate: apply every update ordered before (and
+            # including) this sync — blocking on stragglers as needed
+            t_gate = time.monotonic()
+            while cursor <= ev.index:
+                e = self.events[cursor]
+                if e.proc == self.proc:
+                    d = delta if e.round == ev.round else None
+                    assert d is not None, "own events apply in order"
+                else:
+                    d = _dec(self.kv.get(self._delta_key(e.proc, e.round),
+                                         cfg.comm_timeout_s))
+                    comm_fetches += 1
+                z_rep = z_rep + d
+                applied_updates += e.num_updates
+                cursor += 1
+            gate_wait_s += time.monotonic() - t_gate
+            max_staleness = max(max_staleness, ev.staleness)
+
+            # pull: working view becomes the canonical replica
+            state.tokens = z_rep.copy()
+            pulled = z_rep.copy()
+
+            trace.append({
+                "event": ev.index, "round": ev.round,
+                "wall_s": time.monotonic() - t0,
+                "own_updates": own_updates,
+                "applied_updates": applied_updates,
+                "comm_events": comm_posts + comm_fetches,
+                "gate_wait_s": gate_wait_s,
+                "staleness": ev.staleness,
+                "gated": ev.gated,
+                "consensus": consensus_estimate(z_rep, cfg.rule),
+            })
+
+        # catch up on peers' trailing events so every process finishes
+        # with the identical full-run replica (the digest bar)
+        while cursor < len(self.events):
+            e = self.events[cursor]
+            d = _dec(self.kv.get(self._delta_key(e.proc, e.round),
+                                 cfg.comm_timeout_s))
+            comm_fetches += 1
+            z_rep = z_rep + d
+            applied_updates += e.num_updates
+            cursor += 1
+        wall_s = time.monotonic() - t0
+
+        # objective evaluation is post-hoc, off the clock: consensus
+        # snapshots were recorded per sync, evaluated here
+        for rec in trace:
+            rec["objective"] = float(L.global_objective(
+                self.method.problem, rec.pop("consensus")))
+
+        lo, hi = agent_shard(cfg.num_agents, cfg.num_procs, self.proc)
+        h = hashlib.sha256()
+        h.update(np.ascontiguousarray(z_rep).tobytes())
+        h.update(f"{applied_updates}:{comm_posts}".encode())
+        return AsyncResult(
+            proc=self.proc, digest=h.hexdigest()[:16], trace=trace,
+            tokens=z_rep, xs_local=state.xs[lo:hi].copy(),
+            agent_range=(lo, hi), own_updates=own_updates,
+            applied_updates=applied_updates, comm_posts=comm_posts,
+            comm_fetches=comm_fetches, gate_wait_s=gate_wait_s,
+            wall_s=wall_s, max_staleness=max_staleness)
+
+
+def _enc(arr: np.ndarray) -> bytes:
+    return _enc_blob(np.ascontiguousarray(arr))
+
+
+def _dec(blob: bytes) -> np.ndarray:
+    return _dec_blob(blob)
+
+
+def run_threaded(cfg: AsyncBCDConfig, methods: Sequence[IncrementalMethod],
+                 kv=None) -> List[AsyncResult]:
+    """Run all of a config's workers as threads in one process.
+
+    Test/laptop harness: real multi-process runs go through
+    `launch/train_async.py`; this drives the same event loops over a
+    `DictKV`, preserving every ordering/digest property (the numerics
+    never depend on which transport carries the deltas).
+    """
+    import threading
+
+    from repro.dist.async_comm import DictKV
+
+    kv = kv or DictKV()
+    workers = [AsyncWorker(cfg, methods[p], p, kv)
+               for p in range(cfg.num_procs)]
+    results: List[Optional[AsyncResult]] = [None] * cfg.num_procs
+    errors: List[BaseException] = []
+
+    def drive(p):
+        try:
+            results[p] = workers[p].run()
+        except BaseException as e:      # surface worker failures in the test
+            errors.append(e)
+
+    threads = [threading.Thread(target=drive, args=(p,), daemon=True)
+               for p in range(cfg.num_procs)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=cfg.comm_timeout_s + 60)
+    if errors:
+        raise errors[0]
+    assert all(r is not None for r in results), "worker thread hung"
+    return results

@@ -81,7 +81,7 @@ def lower_combo(arch: str, shape_name: str, multi_pod: bool = False,
     model = build_model(cfg, window=window)
 
     chips = 512 if multi_pod else 256
-    t0 = time.time()
+    t0 = time.monotonic()
 
     if shape.kind == "train" and baseline_dp:
         # synchronous all-reduce data-parallel baseline (what API-BCD
@@ -180,7 +180,7 @@ def lower_combo(arch: str, shape_name: str, multi_pod: bool = False,
         n_params = count_params(params_shapes)
         n_expert = _expert_param_count(params_shapes)
 
-    compile_s = time.time() - t0
+    compile_s = time.monotonic() - t0
 
     # structural HLO cost model (loop-corrected; per-device) -> global
     hlo = compiled.as_text()

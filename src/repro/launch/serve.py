@@ -65,18 +65,18 @@ def _serve_raw(args, cfg, model, params):
     total = p + prefix + args.new_tokens
     prefill = jax.jit(partial(model.prefill, cache_len=total))
     decode = jax.jit(model.decode_step)
-    t0 = time.time()
+    t0 = time.monotonic()
     logits, caches = prefill(params, prompt)
     logits.block_until_ready()
-    print(f"prefill: {b}x{p} tokens in {time.time() - t0:.3f}s")
+    print(f"prefill: {b}x{p} tokens in {time.monotonic() - t0:.3f}s")
     token = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-    t0 = time.time()
+    t0 = time.monotonic()
     for i in range(args.new_tokens):
         logits, caches = decode(params, token, caches,
                                 jnp.int32(p + prefix + i))
         token = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
     token.block_until_ready()
-    dt = time.time() - t0
+    dt = time.monotonic() - t0
     print(f"decode: {args.new_tokens} x batch {b} in {dt:.3f}s "
           f"({args.new_tokens * b / dt:.1f} tok/s)")
 
@@ -156,14 +156,14 @@ def main():
             from repro.dist.server import BatchedServer
             srv = BatchedServer(model, params, max_batch=args.max_batch)
 
-    t0 = time.time()
+    t0 = time.monotonic()
     uids = [srv.submit(p, max_new_tokens=b)
             for p, b in zip(prompts, budgets)]
     latency = {}
     while srv.pending or getattr(srv, "num_active", 0):
         for r in srv.step():
-            latency[r.uid] = time.time() - t0
-    total = time.time() - t0
+            latency[r.uid] = time.monotonic() - t0
+    total = time.monotonic() - t0
     done = {r.uid: r for r in srv.run()}
 
     toks = sum(len(done[u].output) for u in uids)

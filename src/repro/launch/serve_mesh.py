@@ -233,10 +233,10 @@ def run_parent(args, argv) -> int:
              "--process-id", str(i), "--coordinator", f"localhost:{port}"],
             stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True))
     outs, rcs = [], []
-    deadline = time.time() + args.timeout
+    deadline = time.monotonic() + args.timeout
     for i, p in enumerate(procs):
         try:
-            out, _ = p.communicate(timeout=max(1, deadline - time.time()))
+            out, _ = p.communicate(timeout=max(1, deadline - time.monotonic()))
         except subprocess.TimeoutExpired:
             for q in procs:
                 q.kill()

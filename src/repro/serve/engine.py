@@ -297,7 +297,8 @@ class Engine:
         self._gen: List[List[int]] = [[] for _ in range(self.max_batch)]
         # tokens a recomputed slot still has to re-insert through the
         # decode step before it is live again (paged "recompute" only)
-        self._replay: List[List[int]] = [[] for _ in range(self.max_batch)]
+        self._replay: List[Deque[int]] = [deque()
+                                          for _ in range(self.max_batch)]
         # held as int32 end-to-end: these feed the jitted step directly
         # (no per-step downcast)
         self._lengths = np.zeros(self.max_batch, np.int32)  # tokens in cache
@@ -513,7 +514,7 @@ class Engine:
             # the eviction point.
             self._cur[slot] = req.gen_prefix[0]
             self._cur_dirty = True
-            self._replay[slot] = list(req.gen_prefix[1:])
+            self._replay[slot] = deque(req.gen_prefix[1:])
             return None
         return req, slot, tok_dev
 
@@ -564,7 +565,7 @@ class Engine:
         self.num_preemptions += 1
         self._slot_req[slot] = None
         self._gen[slot] = []
-        self._replay[slot] = []     # rebuilt from gen_prefix on re-admission
+        self._replay[slot] = deque()  # rebuilt from gen_prefix on re-admission
         self._allocator.free_partial(self._tables[slot])
         self._tables[slot] = 0
         self._lengths[slot] = 0
@@ -740,7 +741,7 @@ class Engine:
                 # token's KV; its argmax is the already-known next
                 # token, so feed that from the replay queue and skip
                 # emission/EOS/budget (all checked pre-eviction)
-                self._cur[s] = self._replay[s].pop(0)
+                self._cur[s] = self._replay[s].popleft()
                 self._cur_dirty = True
                 self._stats["replayed_tokens"] += 1
                 continue

@@ -20,7 +20,7 @@ class MetricLogger:
                  run_name: str = "train"):
         self.echo_every = echo_every
         self._fh = None
-        self._t0 = time.time()
+        self._t0 = time.monotonic()
         if out_dir:
             os.makedirs(out_dir, exist_ok=True)
             self._path = os.path.join(out_dir, f"{run_name}.jsonl")
@@ -28,7 +28,7 @@ class MetricLogger:
 
     def log(self, step: int, **metrics):
         rec = {"step": int(step),
-               "wall_s": round(time.time() - self._t0, 3)}
+               "wall_s": round(time.monotonic() - self._t0, 3)}
         rec.update({k: (float(v) if hasattr(v, "__float__") else v)
                     for k, v in metrics.items()})
         if self._fh:

@@ -1,0 +1,294 @@
+"""True-async API-BCD runtime (repro.dist.async_*): deterministic
+schedules, bounded staleness, staleness-aware method entry points, the
+threaded runtime's digest discipline, and the real 2-process
+`launch/train_async.py` driver."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from proptest import property_sweep
+from repro.core.driver import run_serial
+from repro.core.graph import ring_graph
+from repro.core.methods import APIBCD, GAPIBCD
+from repro.data import make_problem
+from repro.dist.async_schedule import (
+    agent_shard, build_schedule, local_steps, walk_sequence)
+from repro.dist.async_trainer import (
+    AsyncBCDConfig, consensus_estimate, run_threaded)
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+# ---------------------------------------------------------------------------
+# schedule: virtual time, staleness gate, adaptive rates
+# ---------------------------------------------------------------------------
+
+def test_schedule_zero_delay_is_lockstep():
+    """max_delay=0 degenerates to the BSP superstep: nobody is ever
+    stale, and the global order is round-by-round (all of round r
+    before any of round r+1), whatever the speeds."""
+    ev = build_schedule(3, 5, 1, [1.0, 4.0, 2.0], max_delay=0)
+    assert len(ev) == 15
+    assert all(e.staleness == 0 for e in ev)
+    rounds_seen = [e.round for e in ev]
+    assert rounds_seen == sorted(rounds_seen)
+
+
+@property_sweep(num_cases=8)
+def test_schedule_staleness_bounded(rng):
+    """Per-event staleness telemetry never exceeds the configured bound,
+    for random fleet shapes, speeds, and bounds."""
+    procs = int(rng.integers(2, 5))
+    delay = int(rng.integers(0, 4))
+    speeds = rng.uniform(0.5, 4.0, procs).tolist()
+    ev = build_schedule(procs, int(rng.integers(2, 12)),
+                        int(rng.integers(1, 6)), speeds, max_delay=delay,
+                        adaptive=bool(rng.integers(0, 2)))
+    assert max(e.staleness for e in ev) <= delay
+    # the order is a permutation of every process's rounds
+    assert sorted((e.proc, e.round) for e in ev) == sorted(
+        (p, r) for p in range(procs)
+        for r in range(1, max(e.round for e in ev) + 1))
+
+
+def test_schedule_unbounded_lets_fast_run_ahead():
+    """With no gate, a 10x-faster process's early rounds all complete
+    before the straggler's round 2 — and staleness telemetry sees it."""
+    ev = build_schedule(2, 10, 1, [1.0, 10.0], max_delay=None)
+    fast = [e for e in ev if e.proc == 0]
+    assert max(e.staleness for e in fast) >= 5
+    assert not any(e.gated for e in ev)
+    gated = build_schedule(2, 10, 1, [1.0, 10.0], max_delay=2)
+    assert max(e.staleness for e in gated) <= 2
+    assert any(e.gated for e in gated if e.proc == 0)
+
+
+def test_adaptive_local_steps_equalize_cadence():
+    """Adaptive rates: a 3x straggler takes ~1/3 the walks per sync, so
+    round durations (steps * speed) match across the fleet."""
+    assert local_steps(6, 1.0, adaptive=True) == 6
+    assert local_steps(6, 3.0, adaptive=True) == 2
+    assert local_steps(6, 3.0, adaptive=False) == 6
+    assert local_steps(1, 8.0, adaptive=True) == 1    # floor at 1
+    ev = build_schedule(2, 8, 6, [1.0, 3.0], max_delay=1, adaptive=True)
+    # matched cadence keeps the gate open: nothing is ever gated
+    assert not any(e.gated for e in ev)
+
+
+@property_sweep(num_cases=6)
+def test_agent_shard_partitions(rng):
+    n = int(rng.integers(1, 40))
+    procs = int(rng.integers(1, min(n, 8) + 1))
+    spans = [agent_shard(n, procs, p) for p in range(procs)]
+    covered = [a for lo, hi in spans for a in range(lo, hi)]
+    assert covered == list(range(n))
+    assert max(hi - lo for lo, hi in spans) \
+        - min(hi - lo for lo, hi in spans) <= 1
+
+
+def test_walk_sequence_single_process_matches_run_serial():
+    """P=1 cyclic sequence is bit-for-bit `run_serial`'s round-robin:
+    walk w starts at agent (w*n)//M and rings through all agents."""
+    n, m = 7, 3
+    seq = walk_sequence(n, 1, 0, m, 12)
+    pos = [(w * n) // m for w in range(m)]
+    for j, (agent, w) in enumerate(seq):
+        assert w == j % m
+        assert agent == pos[w]
+        pos[w] = (pos[w] + 1) % n
+
+
+def test_walk_sequence_random_stays_in_shard():
+    seq = walk_sequence(10, 3, 1, 2, 50, kind="random", seed=4)
+    lo, hi = agent_shard(10, 3, 1)
+    assert all(lo <= a < hi for a, _ in seq)
+    assert seq == walk_sequence(10, 3, 1, 2, 50, kind="random", seed=4)
+    assert seq != walk_sequence(10, 3, 1, 2, 50, kind="random", seed=5)
+
+
+# ---------------------------------------------------------------------------
+# staleness-aware method entry points (core/methods.py)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_problem():
+    return make_problem("cpusmall", 5, seed=3, subsample=256)
+
+
+@property_sweep(num_cases=4)
+def test_token_view_zero_delay_bitwise(rng):
+    """`update(..., token_view=tokens.copy())` — a zero-delay received
+    estimate — is bitwise identical to the default fresh-view call, for
+    both methods and both update rules (the Thm 2/3 degenerate case)."""
+    prob = make_problem("cpusmall", 4, seed=int(rng.integers(0, 100)),
+                        subsample=256)
+    m = int(rng.integers(1, 4))
+    method = (APIBCD(prob, tau=1.0, num_walks=m)
+              if rng.integers(0, 2) else
+              GAPIBCD(prob, tau=1.0, num_walks=m, rho=5.0))
+    state = method.init()
+    # advance a few steps so the state is non-trivial
+    for j in range(4):
+        state = method.update(state, int(rng.integers(0, 4)), j % m)
+    agent, walk = int(rng.integers(0, 4)), int(rng.integers(0, m))
+
+    a = method.update(state, agent, walk)
+    b = method.update(state, agent, walk, token_view=state.tokens.copy())
+    fa = method.update_fresh(state, agent)
+    fb = method.update_fresh(state, agent, token_view=state.tokens.copy())
+    for x, y in ((a, b), (fa, fb)):
+        assert np.array_equal(x.tokens, y.tokens)
+        assert np.array_equal(x.xs, y.xs)
+        assert np.array_equal(x.zhat, y.zhat)
+
+
+def test_token_view_stale_differs_but_converges_shape(small_problem):
+    """A genuinely stale view changes the result (the method really
+    consumes it) but preserves the token-credit invariant's shape."""
+    method = APIBCD(small_problem, tau=1.0, num_walks=2)
+    state = method.init()
+    for j in range(6):
+        state = method.update(state, j % 5, j % 2)
+    stale = method.init().tokens          # all-zeros: maximally stale
+    out = method.update(state, 2, 1, token_view=stale)
+    ref = method.update(state, 2, 1)
+    assert not np.array_equal(out.tokens, ref.tokens)
+    # 12b: only the activated walk's token moved relative to the view
+    assert np.array_equal(out.tokens[0], state.tokens[0])
+
+
+# ---------------------------------------------------------------------------
+# threaded runtime: digests, staleness, straggler injection
+# ---------------------------------------------------------------------------
+
+def test_single_process_lockstep_matches_run_serial(small_problem):
+    """One async worker with local_steps=1 IS the serial driver: final
+    tokens and models are bitwise those of `run_serial` (CyclicWalks)."""
+    m, rounds = 2, 15
+    cfg = AsyncBCDConfig(num_procs=1, num_agents=5, num_walks=m,
+                         rounds=rounds)
+    res = run_threaded(
+        cfg, [APIBCD(small_problem, tau=1.0, num_walks=m)])[0]
+    ser = run_serial(APIBCD(small_problem, tau=1.0, num_walks=m),
+                     ring_graph(5), num_iterations=rounds)
+    assert np.array_equal(res.tokens, ser.tokens)
+    assert np.array_equal(res.xs_local, ser.xs)
+
+
+def _threaded(problem, rule="walk", **kw):
+    cfg = AsyncBCDConfig(num_procs=2, num_agents=5, num_walks=2,
+                         rounds=10, rule=rule, **kw)
+    methods = [APIBCD(problem, tau=1.0, num_walks=2) for _ in range(2)]
+    return cfg, run_threaded(cfg, methods)
+
+
+def test_threaded_digest_identical_across_workers_and_repeats(
+        small_problem):
+    kw = dict(local_steps=3, max_delay=2, adaptive=True,
+              speeds=(1.0, 2.5))
+    _, res = _threaded(small_problem, **kw)
+    assert res[0].digest == res[1].digest
+    assert np.array_equal(res[0].tokens, res[1].tokens)
+    _, rep = _threaded(small_problem, **kw)
+    assert rep[0].digest == res[0].digest
+    # staleness stayed within the bound on every process
+    assert max(r.max_staleness for r in res) <= 2
+
+
+def test_threaded_fresh_rule_digest_identical(small_problem):
+    _, res = _threaded(small_problem, rule="fresh", local_steps=2,
+                       max_delay=1)
+    assert res[0].digest == res[1].digest
+
+
+def test_threaded_objective_decreases(small_problem):
+    _, res = _threaded(small_problem, local_steps=4, max_delay=3,
+                       adaptive=True, speeds=(1.0, 2.0))
+    objs = [rec["objective"] for rec in res[0].trace]
+    assert objs[-1] < objs[0], objs
+    # walk-rule consensus is the token sum (each 12b credit lands on
+    # exactly one token), matching mean_i x_i up to communication lag
+    est = consensus_estimate(res[0].tokens, "walk")
+    assert est.shape == res[0].tokens.shape[1:]
+
+
+def test_straggler_injection_pads_updates(small_problem):
+    """The injection hook is a hard floor: a 3x straggler's wall time is
+    at least own_updates * 3 * min_update_s."""
+    floor = 0.004
+    cfg = AsyncBCDConfig(num_procs=2, num_agents=5, num_walks=2,
+                         rounds=6, local_steps=2, max_delay=2,
+                         speeds=(1.0, 3.0), min_update_s=floor)
+    res = run_threaded(
+        cfg, [APIBCD(small_problem, tau=1.0, num_walks=2)
+              for _ in range(2)])
+    slow = res[1]
+    assert slow.wall_s >= slow.own_updates * 3.0 * floor * 0.95
+    # the fast process spent real time blocked on the straggler
+    assert res[0].gate_wait_s > 0.0
+
+
+def test_comm_counts_accounted(small_problem):
+    cfg, res = _threaded(small_problem, local_steps=1, max_delay=0)
+    for r in res:
+        assert r.comm_posts == cfg.rounds
+        # every peer event is fetched exactly once
+        assert r.comm_fetches == cfg.rounds * (cfg.num_procs - 1)
+        assert r.applied_updates == sum(
+            rr.own_updates for rr in res)
+
+
+# ---------------------------------------------------------------------------
+# the real multi-process driver (subprocess; wired into CI)
+# ---------------------------------------------------------------------------
+
+def _run_train_async(tmp_path, extra):
+    out = tmp_path / "run.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train_async",
+         "--processes", "2", "--agents", "6", "--walks", "2",
+         "--rounds", "6", "--subsample", "256",
+         "--out", str(out), *extra],
+        env=env, capture_output=True, text=True, timeout=600, cwd=ROOT)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert res.stdout.count("ASYNC_BCD_OK") == 2, res.stdout
+    digests = [ln.split("digest=")[1] for ln in res.stdout.splitlines()
+               if "ASYNC_BCD_OK" in ln]
+    assert len(set(digests)) == 1, f"processes disagree: {digests}"
+    import json
+    with open(out) as f:
+        return json.load(f)
+
+
+def test_two_process_async_driver(tmp_path):
+    """A real 2-process async run over the jax.distributed coordination
+    service: bounded staleness, adaptive rates, straggler injection —
+    both processes must agree on the shared-estimate digest, and the
+    merged trace must show monotone progress."""
+    run = _run_train_async(tmp_path, [
+        "--local-steps", "3", "--max-delay", "2", "--adaptive",
+        "--straggle", "1:2.0", "--min-update-ms", "1"])
+    assert run["mode"] == "async"
+    assert run["num_processes"] == 2
+    assert run["max_staleness"] <= 2
+    assert run["total_comm_events"] > 0
+    objs = [r["objective"] for p in run["processes"]
+            for r in p["trace"]]
+    assert min(objs) == objs[-1] or min(objs) < objs[0]
+    # adaptive rates: the straggler took fewer walks per sync
+    steps = {p["proc"]: p["local_steps"] for p in run["processes"]}
+    assert steps[1] < steps[0]
+
+
+def test_two_process_lockstep_driver_file_transport(tmp_path):
+    """The file transport runs the identical numerics (digests don't
+    depend on which transport carried the deltas)."""
+    run = _run_train_async(tmp_path, ["--transport", "file"])
+    assert run["mode"] == "lockstep"
+    assert run["max_staleness"] == 0

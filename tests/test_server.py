@@ -554,6 +554,46 @@ def test_engine_preemption_during_replay_bit_identity(served):
     assert eng.free_blocks == eng.num_blocks
 
 
+def test_engine_long_replay_bit_identity(served):
+    """Regression for the O(n²) replay drain: `_replay` held a list and
+    `pop(0)` shifted every remaining element each decode step.  It is a
+    deque now; a request evicted LATE in a long generation (hundreds of
+    queued replay tokens) must drain it popleft-by-popleft and still
+    reproduce the unpreempted output bitwise.  References are solo
+    *paged* runs with the same geometry: at this length the paged and
+    arena backends legitimately argmax-tie-flip on this random-weight
+    model, and the property under test is replay, not backend parity."""
+    cfg, model, params = served
+    rng = np.random.default_rng(35)
+    pa = rng.integers(0, cfg.vocab_size, (8,))
+    pb = rng.integers(0, cfg.vocab_size, (8,))
+    budget = 96
+
+    refs = {}
+    for key, p in (("a", pa), ("b", pb)):
+        r = Engine(model, params, max_batch=2, max_len=128, paged=True,
+                   block_size=8, num_blocks=40, prefill_chunk=8)
+        r.submit(p, max_new_tokens=budget)
+        refs[key] = r.run()[0].output
+
+    # worst case 13 blocks each (8 + 96 - 1 = 103 tokens / 8); pool 18
+    # admits both optimistically, exhausts when the pair holds ~144
+    # tokens, so B is evicted ~60 tokens deep → a long replay queue
+    eng = Engine(model, params, max_batch=2, max_len=128, paged=True,
+                 block_size=8, num_blocks=18, prefill_chunk=8)
+    assert eng.paged and eng.preemption == "recompute"
+    from collections import deque
+    assert all(isinstance(q, deque) for q in eng._replay)
+    ua = eng.submit(pa, max_new_tokens=budget)
+    ub = eng.submit(pb, max_new_tokens=budget)
+    outs = {r.uid: r for r in _drain_capped(eng, max_steps=1200)}
+    assert outs[ub].preemptions >= 1
+    assert eng.stats["replayed_tokens"] >= 50, eng.stats["replayed_tokens"]
+    np.testing.assert_array_equal(outs[ua].output, refs["a"])
+    np.testing.assert_array_equal(outs[ub].output, refs["b"])
+    assert eng.free_blocks == eng.num_blocks
+
+
 def test_engine_preemption_arg_validated(served):
     cfg, model, params = served
     with pytest.raises(ValueError, match="preemption"):
