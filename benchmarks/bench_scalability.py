@@ -37,10 +37,10 @@ def bench_walk_scaling(target=0.1, iters=800):
     for m in (1, 2, 5, 10):
         method = APIBCD(problem, tau=0.5 / m, num_walks=m)
         walks = [CyclicWalk(order) for _ in range(m)]
-        t0 = time.time()
+        t0 = time.monotonic()
         res = simulate_incremental(method, net, walks,
                                    max_iterations=iters, eval_every=10)
-        wall = time.time() - t0
+        wall = time.monotonic() - t0
         tt, ct = res.time_to_metric(target)
         derived = (f"M={m};final={res.trace[-1].metric:.4f}")
         if tt is not None:
@@ -60,10 +60,10 @@ def bench_network_scaling(target=0.1, iters_per_agent=30):
         method = APIBCD(problem, tau=0.1, num_walks=5)
         walks = [CyclicWalk(order) for _ in range(5)]
         iters = iters_per_agent * n
-        t0 = time.time()
+        t0 = time.monotonic()
         res = simulate_incremental(method, net, walks,
                                    max_iterations=iters, eval_every=10)
-        wall = time.time() - t0
+        wall = time.monotonic() - t0
         tt, ct = res.time_to_metric(target)
         derived = f"N={n};final={res.trace[-1].metric:.4f}"
         if tt is not None:

@@ -76,15 +76,15 @@ def workload(cfg, requests, plen, short, long):
 
 
 def serve_once(srv, reqs):
-    t0 = time.time()
+    t0 = time.monotonic()
     uids = [srv.submit(p, max_new_tokens=b,
                        eos_id=rest[0] if rest else None)
             for p, b, *rest in reqs]
     latency = {}
     while srv.pending or getattr(srv, "num_active", 0):
         for r in srv.step():
-            latency[r.uid] = time.time() - t0
-    total = time.time() - t0
+            latency[r.uid] = time.monotonic() - t0
+    total = time.monotonic() - t0
     done = srv.run()
     toks = sum(len(r.output) for r in done)
     lats = [latency[u] for u in uids]

@@ -30,10 +30,10 @@ from repro.data import make_problem  # noqa: E402
 
 def _run_sim(method, net, order, iters, seed=0):
     walks = [CyclicWalk(order) for _ in range(method.num_walks)]
-    t0 = time.time()
+    t0 = time.monotonic()
     res = simulate_incremental(method, net, walks, max_iterations=iters,
                                eval_every=10, seed=seed)
-    wall = time.time() - t0
+    wall = time.monotonic() - t0
     return res, wall
 
 
@@ -68,10 +68,10 @@ def _figure(name, dataset, n_agents, zeta, m_walks, alpha, tau_is, tau_api,
     # incremental methods against)
     dgd = DGD(problem, alpha=min(alpha, 0.05),
               mixing=metropolis_hastings_matrix(net))
-    t0 = time.time()
+    t0 = time.monotonic()
     res = simulate_gossip(dgd, net, max_rounds=max(iters // n_agents, 50),
                           eval_every=5)
-    wall = time.time() - t0
+    wall = time.monotonic() - t0
     t, c, k, metric = res.as_arrays()
     tt, ct = res.time_to_metric(target, lower_is_better=lower_better)
     derived = (f"final={metric[-1]:.4f};sim_time={t[-1] * 1e3:.2f}ms;"
@@ -123,12 +123,12 @@ def bench_kernels():
 
     def timeit(name, fn, *args, reps=3, **kw):
         fn(*args, **kw)     # warmup/trace
-        t0 = time.time()
+        t0 = time.monotonic()
         out = None
         for _ in range(reps):
             out = fn(*args, **kw)
         jax.tree.map(lambda x: x.block_until_ready(), out)
-        rows.append((name, (time.time() - t0) / reps * 1e6, "interpret"))
+        rows.append((name, (time.monotonic() - t0) / reps * 1e6, "interpret"))
 
     x = jnp.asarray(rng.standard_normal((4096, 1024)), jnp.float32)
     g = jnp.asarray(rng.standard_normal((4096, 1024)), jnp.float32)

@@ -37,18 +37,18 @@ def main():
                  max_len=bucket_length(args.prompt_len + args.new_tokens))
     budgets = [max(1, args.new_tokens // 4) if i % 2 else args.new_tokens
                for i in range(args.requests)]
-    t0 = time.time()
+    t0 = time.monotonic()
     uids = [eng.submit(rng.integers(0, cfg.vocab_size, (args.prompt_len,)),
                        max_new_tokens=b) for b in budgets]
 
     steps = 0
     while eng.pending or eng.num_active:
         for r in eng.step():
-            print(f"  [{time.time() - t0:6.3f}s, step {steps:3d}] "
+            print(f"  [{time.monotonic() - t0:6.3f}s, step {steps:3d}] "
                   f"uid {r.uid} done: {len(r.output)} tokens "
                   f"-> {r.output[:8].tolist()}{'...' if len(r.output) > 8 else ''}")
         steps += 1
-    dt = time.time() - t0
+    dt = time.monotonic() - t0
     toks = sum(len(r.output) for r in eng.run())
     print(f"[{cfg.name}] {len(uids)} requests, {toks} tokens in {dt:.3f}s "
           f"({toks / dt:.1f} tok/s, {steps} engine steps)")

@@ -1,0 +1,40 @@
+"""`repro.analysis` — a JAX/Pallas-aware static-analysis pass that
+machine-checks the invariants this repo has repeatedly paid to relearn.
+
+Every rule descends from a real regression in CHANGES.md: wall-clock
+durations (`time.time()` subtraction — the PR 6 monotonic sweep missed
+`benchmarks/` and `examples/`), `list.pop(0)` hot queues (PR 3 admission
+queue, PR 6 replay queue), host syncs inside the serving/async hot loops
+(the PR 5 "token ids, never logits" discipline), unbounded jitted-fn
+caches (the PR 2 `BatchedServer._prefill_fns` class), nondeterminism in
+the digest-disciplined `dist/async_*` modules (the bitwise
+reproducibility contract of PRs 5–6), and Pallas `BlockSpec`
+index_map/grid arity drift in `kernels/`.
+
+Usage:
+
+    PYTHONPATH=src python -m repro.analysis [--check] [--json out] paths...
+
+or programmatically::
+
+    from repro.analysis import run_paths
+    report = run_paths(["src", "tests"])
+    assert not report.active, report.render()
+
+Findings are suppressed inline with
+
+    # repro-lint: disable=<rule>[,<rule>...] -- <reason>
+
+or grandfathered in a committed baseline file (see
+`repro.analysis.baseline`).  `docs/analysis.md` is the rule catalog.
+"""
+from repro.analysis.core import (  # noqa: F401
+    Finding, Report, RULES, iter_python_files, run_file, run_paths,
+    run_source,
+)
+
+# importing the rules package registers every rule in RULES
+from repro.analysis import rules as _rules  # noqa: E402,F401
+
+__all__ = ["Finding", "Report", "RULES", "iter_python_files", "run_file",
+           "run_paths", "run_source"]

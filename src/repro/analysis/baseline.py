@@ -1,0 +1,69 @@
+"""Baseline file: grandfathered findings that don't fail `--check`.
+
+The baseline exists so the linter can be adopted (and new rules added)
+without blocking on fixing every historical finding in one PR — but the
+repo convention is the inverse: fix true positives, pragma intentional
+exceptions *with a reason*, and keep the committed baseline EMPTY.  A
+non-empty baseline is an explicit TODO list, visible in review.
+
+Fingerprints are ``(rule, path, stripped source line)`` — stable under
+unrelated edits that shift line numbers, invalidated the moment the
+offending line itself changes (so a "fixed" line can't silently keep
+its exemption).  Duplicate fingerprints are counted: three identical
+offending lines need a count of 3, and fixing one retires one.
+"""
+from __future__ import annotations
+
+import collections
+import json
+import os
+from typing import Dict, List, Tuple
+
+from repro.analysis.core import Finding
+
+BASELINE_NAME = ".repro-lint-baseline.json"
+_VERSION = 1
+
+Key = Tuple[str, str, str]
+
+
+def _key(f: Finding) -> Key:
+    return (f.rule, f.path.replace(os.sep, "/"), f.snippet)
+
+
+def load(path: str) -> Dict[Key, int]:
+    with open(path, "r", encoding="utf-8") as fh:
+        data = json.load(fh)
+    assert data.get("version") == _VERSION, (
+        f"unknown baseline version in {path}: {data.get('version')}")
+    counts: Dict[Key, int] = collections.Counter()
+    for e in data.get("findings", []):
+        counts[(e["rule"], e["path"], e["snippet"])] += int(
+            e.get("count", 1))
+    return dict(counts)
+
+
+def write(path: str, findings: List[Finding]) -> None:
+    counts = collections.Counter(_key(f) for f in findings)
+    entries = [{"rule": r, "path": p, "snippet": s, "count": c}
+               for (r, p, s), c in sorted(counts.items())]
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump({"version": _VERSION, "findings": entries}, fh, indent=1,
+                  sort_keys=True)
+        fh.write("\n")
+
+
+def apply(findings: List[Finding], baseline: Dict[Key, int]
+          ) -> Tuple[List[Finding], List[Finding]]:
+    """Partition into (still-active, baselined), consuming counts."""
+    budget = collections.Counter(baseline)
+    active: List[Finding] = []
+    matched: List[Finding] = []
+    for f in findings:
+        k = _key(f)
+        if budget.get(k, 0) > 0:
+            budget[k] -= 1
+            matched.append(f)
+        else:
+            active.append(f)
+    return active, matched

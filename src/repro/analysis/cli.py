@@ -1,0 +1,98 @@
+"""Command line for the static-analysis pass.
+
+    PYTHONPATH=src python -m repro.analysis [--check] [--json out] paths...
+
+Exit codes: 0 = clean (or findings without --check), 1 = findings under
+--check, 2 = usage/baseline errors.  The JSON report always records
+active *and* suppressed findings, so CI artifacts keep suppressions
+auditable.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+from typing import List, Optional
+
+from repro.analysis import baseline as baseline_mod
+from repro.analysis.core import RULE_DOCS, RULES, Report, run_paths
+
+
+def _apply_baseline(report: Report, path: str) -> Optional[str]:
+    try:
+        entries = baseline_mod.load(path)
+    except FileNotFoundError:
+        return f"baseline file not found: {path}"
+    except (ValueError, AssertionError, KeyError) as e:
+        return f"unreadable baseline {path}: {e}"
+    active, matched = baseline_mod.apply(report.active, entries)
+    report.active = active
+    report.suppressed.extend(
+        dataclasses.replace(f, suppressed_by="baseline") for f in matched)
+    return None
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Lint the repo's hard-won JAX/Pallas/async invariants "
+                    "(see docs/analysis.md for the rule catalog).")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to lint (default: src)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero if any unsuppressed finding remains")
+    ap.add_argument("--json", metavar="OUT",
+                    help="write the full JSON report (active + suppressed) "
+                         "to OUT ('-' for stdout)")
+    ap.add_argument("--baseline", metavar="FILE", default=None,
+                    help="baseline of grandfathered findings (default: "
+                         f"./{baseline_mod.BASELINE_NAME} if present)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write the current findings to the baseline file "
+                         "and exit 0 (adoption/bootstrapping aid)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the registered rules and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for name in sorted(RULES):
+            doc = (RULE_DOCS.get(name) or "").strip().splitlines()
+            print(f"{name}: {doc[0] if doc else ''}")
+        return 0
+
+    report = run_paths(args.paths)
+
+    baseline_path = args.baseline
+    if baseline_path is None and os.path.exists(baseline_mod.BASELINE_NAME):
+        baseline_path = baseline_mod.BASELINE_NAME
+
+    if args.write_baseline:
+        out = args.baseline or baseline_mod.BASELINE_NAME
+        baseline_mod.write(out, report.active)
+        print(f"wrote {len(report.active)} finding(s) to {out}")
+        return 0
+
+    if baseline_path is not None:
+        err = _apply_baseline(report, baseline_path)
+        if err is not None:
+            print(err, file=sys.stderr)
+            return 2
+
+    if args.json:
+        payload = json.dumps(report.to_dict(), indent=1, sort_keys=True)
+        if args.json == "-":
+            print(payload)
+        else:
+            with open(args.json, "w", encoding="utf-8") as fh:
+                fh.write(payload + "\n")
+
+    print(report.render())
+    if report.errors:
+        return 2
+    return 1 if (args.check and report.active) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

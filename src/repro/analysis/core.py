@@ -1,0 +1,256 @@
+"""Rule registry, AST context, and the file/source runners.
+
+A rule is a function ``check(ctx: Context) -> Iterable[Finding]``
+registered under a stable kebab-case name.  The runner parses each file
+once, decorates the tree with parent links and an import-alias map, and
+hands the same `Context` to every rule — rules stay tiny and purely
+syntactic.  Suppression (inline pragmas, baseline) is applied by the
+runner, not the rules, so a rule never needs to know about it.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, Tuple
+
+from repro.analysis.pragmas import FilePragmas, parse_pragmas
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str          # as given to the runner (posix-normalized)
+    line: int          # 1-indexed start line of the offending node
+    col: int           # 0-indexed column
+    message: str
+    snippet: str = ""  # stripped source of the start line
+    end_line: int = 0  # last line of the offending node (pragma scope)
+    suppressed_by: str = ""   # "", "pragma", or "baseline"
+
+    def location(self) -> str:
+        return f"{self.path}:{self.line}:{self.col + 1}"
+
+    def render(self) -> str:
+        return f"{self.location()}: [{self.rule}] {self.message}"
+
+    def to_dict(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "col": self.col, "message": self.message,
+                "snippet": self.snippet,
+                "suppressed_by": self.suppressed_by}
+
+
+@dataclasses.dataclass
+class Report:
+    """Partitioned findings: `active` fails the build, `suppressed`
+    records what pragmas/baseline are hiding (kept for the JSON
+    artifact so suppressions stay auditable)."""
+
+    active: List[Finding] = dataclasses.field(default_factory=list)
+    suppressed: List[Finding] = dataclasses.field(default_factory=list)
+    errors: List[str] = dataclasses.field(default_factory=list)
+    files_checked: int = 0
+
+    def extend(self, other: "Report") -> None:
+        self.active.extend(other.active)
+        self.suppressed.extend(other.suppressed)
+        self.errors.extend(other.errors)
+        self.files_checked += other.files_checked
+
+    def render(self) -> str:
+        lines = [f.render() for f in self.active] + list(self.errors)
+        lines.append(
+            f"{len(self.active)} finding(s), {len(self.suppressed)} "
+            f"suppressed, {self.files_checked} file(s) checked")
+        return "\n".join(lines)
+
+    def to_dict(self) -> dict:
+        return {
+            "findings": [f.to_dict() for f in self.active],
+            "suppressed": [f.to_dict() for f in self.suppressed],
+            "errors": list(self.errors),
+            "files_checked": self.files_checked,
+            "rules": sorted(RULES),
+        }
+
+
+RULES: Dict[str, Callable[["Context"], Iterable[Finding]]] = {}
+RULE_DOCS: Dict[str, str] = {}
+
+
+def register(name: str, doc: str = ""):
+    """Register ``check(ctx)`` under a stable rule name."""
+    def wrap(fn):
+        assert name not in RULES, f"duplicate rule {name}"
+        RULES[name] = fn
+        RULE_DOCS[name] = doc or (fn.__doc__ or "").strip()
+        return fn
+    return wrap
+
+
+class ImportMap:
+    """Local name -> canonical dotted path, from the file's imports.
+
+    ``import numpy as np``                 np   -> numpy
+    ``from jax.experimental import pallas as pl``   pl -> jax.experimental.pallas
+    ``from time import time``              time -> time.time
+    Function-level imports are included (aliases are per-file: good
+    enough for lint, and it keeps rules scope-free).
+    """
+
+    def __init__(self, tree: ast.AST):
+        self.names: Dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.names[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom) and node.module \
+                    and node.level == 0:
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    self.names[a.asname or a.name] = (
+                        f"{node.module}.{a.name}")
+
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        """Dotted canonical path of a Name/Attribute chain, or None."""
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        root = self.names.get(node.id, node.id)
+        return ".".join([root] + list(reversed(parts)))
+
+
+class Context:
+    """Everything a rule needs about one file."""
+
+    def __init__(self, path: str, source: str, tree: ast.Module):
+        self.path = path.replace(os.sep, "/")
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = tree
+        self.imports = ImportMap(tree)
+        self.parents: Dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(tree):
+            for child in ast.iter_child_nodes(node):
+                self.parents[child] = node
+
+    # -- helpers shared by rules ------------------------------------------
+
+    def parent(self, node: ast.AST) -> Optional[ast.AST]:
+        return self.parents.get(node)
+
+    def ancestors(self, node: ast.AST) -> Iterator[ast.AST]:
+        cur = self.parents.get(node)
+        while cur is not None:
+            yield cur
+            cur = self.parents.get(cur)
+
+    def enclosing_scope(self, node: ast.AST) -> ast.AST:
+        """Nearest enclosing function def (or the module)."""
+        for anc in self.ancestors(node):
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Module)):
+                return anc
+        return self.tree
+
+    def lookup_assignment(self, name: str, at: ast.AST) -> Optional[ast.expr]:
+        """Value of the closest ``name = <expr>`` in the scopes enclosing
+        ``at`` (innermost first).  Purely lexical — good enough to chase
+        ``grid = (b, pl.cdiv(s, c))`` / ``spec = pl.BlockSpec(...)``."""
+        scopes = [s for s in self.ancestors(at)
+                  if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                    ast.Module))]
+        for scope in scopes or [self.tree]:
+            hit: Optional[ast.expr] = None
+            for sub in ast.walk(scope):
+                if (isinstance(sub, ast.Assign) and len(sub.targets) == 1
+                        and isinstance(sub.targets[0], ast.Name)
+                        and sub.targets[0].id == name):
+                    hit = sub.value
+                elif (isinstance(sub, ast.AnnAssign) and sub.value is not None
+                        and isinstance(sub.target, ast.Name)
+                        and sub.target.id == name):
+                    hit = sub.value
+            if hit is not None:
+                return hit
+        return None
+
+    def finding(self, rule: str, node: ast.AST, message: str) -> Finding:
+        line = getattr(node, "lineno", 1)
+        snippet = self.lines[line - 1].strip() if line <= len(self.lines) \
+            else ""
+        return Finding(rule=rule, path=self.path, line=line,
+                       col=getattr(node, "col_offset", 0), message=message,
+                       snippet=snippet,
+                       end_line=getattr(node, "end_lineno", line) or line)
+
+
+def run_source(source: str, path: str = "<string>",
+               rules: Optional[Dict] = None) -> Report:
+    """Lint one source string (tests feed fixture snippets through this;
+    ``path`` participates in path-scoped rules like
+    nondeterminism-in-dist)."""
+    report = Report(files_checked=1)
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        report.errors.append(f"{path}:{e.lineno or 0}: parse error: {e.msg}")
+        return report
+    ctx = Context(path, source, tree)
+    pragmas: FilePragmas = parse_pragmas(source)
+    for name, check in sorted((rules or RULES).items()):
+        for f in check(ctx):
+            if pragmas.disables(name, f.line, f.end_line):
+                report.suppressed.append(
+                    dataclasses.replace(f, suppressed_by="pragma"))
+            else:
+                report.active.append(f)
+    report.active.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return report
+
+
+def run_file(path: str, rules: Optional[Dict] = None) -> Report:
+    try:
+        with open(path, "r", encoding="utf-8") as fh:
+            source = fh.read()
+    except (OSError, UnicodeDecodeError) as e:
+        report = Report(files_checked=1)
+        report.errors.append(f"{path}: unreadable: {e}")
+        return report
+    return run_source(source, path, rules=rules)
+
+
+def iter_python_files(paths: Iterable[str]) -> Iterator[str]:
+    """Expand files/directories into a deterministic .py file list
+    (sorted; __pycache__ and dot-directories skipped)."""
+    seen = set()
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py") and p not in seen:
+                seen.add(p)
+                yield p
+            continue
+        hits: List[str] = []
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(d for d in dirs
+                             if d != "__pycache__" and not d.startswith("."))
+            hits.extend(os.path.join(root, f) for f in files
+                        if f.endswith(".py"))
+        for f in sorted(hits):
+            if f not in seen:
+                seen.add(f)
+                yield f
+
+
+def run_paths(paths: Iterable[str], rules: Optional[Dict] = None) -> Report:
+    report = Report()
+    for f in iter_python_files(paths):
+        report.extend(run_file(f, rules=rules))
+    report.active.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return report

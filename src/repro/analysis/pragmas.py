@@ -1,0 +1,93 @@
+"""Inline suppression pragmas.
+
+Syntax — trailing on the offending line (or any line of a multi-line
+statement's span)::
+
+    x = time.time() - t0   # repro-lint: disable=wall-clock-duration -- why
+
+or standalone on a comment line directly above the statement (long
+reasons may continue on further comment lines)::
+
+    # repro-lint: disable=host-sync-in-hot-loop -- this [B] token fetch
+    # is the per-step device->host contract
+    nxt = np.asarray(toks_dev)
+
+  * ``disable=<rule>[,<rule>...]`` — suppress those rules on that line
+    span; ``disable=all`` suppresses everything.
+  * the ``-- <reason>`` tail is free text.  The repo convention
+    (ISSUE 7 satellite) is that intentional exceptions carry a reason —
+    a pragma with no reason still suppresses, but `--json` reports
+    record ``reason: ""`` so reviewers can spot bare ones.
+  * ``# repro-lint: disable-file=<rule>[,...]`` on any line suppresses
+    the rules for the whole file (use sparingly; prefer line pragmas).
+
+Pragmas ride the *line span* of the finding's AST node, so a pragma on
+any line of a multi-line call (e.g. a ``pl.pallas_call(...)``) covers
+findings anchored to that call.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Set, Tuple
+
+_PRAGMA = re.compile(
+    r"#\s*repro-lint:\s*(?P<kind>disable(?:-file)?)\s*=\s*"
+    r"(?P<rules>[A-Za-z0-9_,\- ]+?)\s*(?:--\s*(?P<reason>.*))?$")
+
+
+@dataclasses.dataclass
+class Pragma:
+    line: int
+    rules: Tuple[str, ...]
+    file_level: bool
+    reason: str
+
+
+@dataclasses.dataclass
+class FilePragmas:
+    by_line: Dict[int, Set[str]]
+    file_level: Set[str]
+    pragmas: List[Pragma]
+
+    def disables(self, rule: str, line: int, end_line: int = 0) -> bool:
+        if rule in self.file_level or "all" in self.file_level:
+            return True
+        for ln in range(line, max(end_line, line) + 1):
+            rules = self.by_line.get(ln)
+            if rules and (rule in rules or "all" in rules):
+                return True
+        return False
+
+
+def parse_pragmas(source: str) -> FilePragmas:
+    by_line: Dict[int, Set[str]] = {}
+    file_level: Set[str] = set()
+    pragmas: List[Pragma] = []
+    lines = source.splitlines()
+    for i, text in enumerate(lines, start=1):
+        if "repro-lint" not in text:
+            continue
+        m = _PRAGMA.search(text)
+        if not m:
+            continue
+        rules = tuple(r.strip() for r in m.group("rules").split(",")
+                      if r.strip())
+        is_file = m.group("kind") == "disable-file"
+        pragmas.append(Pragma(line=i, rules=rules, file_level=is_file,
+                              reason=(m.group("reason") or "").strip()))
+        if is_file:
+            file_level.update(rules)
+            continue
+        by_line.setdefault(i, set()).update(rules)
+        if text.lstrip().startswith("#"):
+            # standalone pragma: it governs the next code line (skipping
+            # blank and continuation-comment lines)
+            j = i
+            while j < len(lines) and (not lines[j].strip()
+                                      or lines[j].lstrip().startswith("#")):
+                j += 1
+            if j < len(lines):
+                by_line.setdefault(j + 1, set()).update(rules)
+    return FilePragmas(by_line=by_line, file_level=file_level,
+                       pragmas=pragmas)

@@ -1,0 +1,9 @@
+"""Rule modules — importing this package registers every rule.
+
+Each module registers one rule named after the bug class it guards
+(see docs/analysis.md for the catalog and the CHANGES.md history each
+rule descends from).
+"""
+from repro.analysis.rules import (  # noqa: F401
+    determinism, hostsync, jit, pallas, queues, timing,
+)

@@ -1,0 +1,106 @@
+"""nondeterminism-in-dist: digest-breaking constructs in `dist/async_*`.
+
+The bug class this rule *prevents* (none shipped — the point is to keep
+it that way): the async trainer's headline property is that a seeded
+bounded-asynchrony run is **bitwise reproducible** across processes and
+repeats (PR 6: every process applies the same lump deltas in the same
+deterministic order; PR 5 established the same digest bar for mesh
+serving).  One unordered iteration feeding ordered application, one
+unseeded RNG, or one wall-clock value reaching control flow silently
+turns "bitwise digest equality" into "usually equal", which is
+undebuggable by construction.
+
+Scope: the digest-disciplined modules only —
+``dist/async_schedule.py``, ``dist/async_trainer.py``,
+``dist/async_comm.py`` (matched by path suffix, so fixtures and
+out-of-tree copies participate).
+
+Flagged:
+
+  * iterating a ``set`` literal / ``set(...)`` call, or a dict view
+    (``.values()`` / ``.keys()`` / ``.items()``) in a ``for`` or a
+    comprehension — set order is salted per process, and dict insertion
+    order can differ across processes that observed events in different
+    wall-clock order.  Wrapping in ``sorted(...)`` is the fix and is
+    not flagged.
+  * module-level RNG (``random.*``) and unseeded numpy RNG
+    (``np.random.default_rng()`` with no arguments, or the legacy
+    ``np.random.<fn>()`` global-state calls).  The blessed form is
+    ``np.random.default_rng((seed, proc))`` — explicitly seeded,
+    per-process (see `async_schedule.walk_sequence`).
+  * any ``time.time()`` call — wall clock must never influence these
+    modules' values; durations use `time.monotonic()` (which is fine
+    and not flagged: timeout aborts raise, they don't change numerics).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.analysis.core import Context, Finding, register
+
+DIGEST_MODULES = ("dist/async_schedule.py", "dist/async_trainer.py",
+                  "dist/async_comm.py")
+
+_SEEDED_CTORS = ("numpy.random.default_rng", "numpy.random.Generator",
+                 "numpy.random.RandomState", "numpy.random.SeedSequence",
+                 "numpy.random.PCG64", "numpy.random.Philox")
+
+
+def _unordered_iter_reason(ctx: Context, it: ast.AST) -> Optional[str]:
+    if isinstance(it, ast.Set) or (
+            isinstance(it, ast.Call) and isinstance(it.func, ast.Name)
+            and it.func.id == "set"):
+        return "set iteration order is hash-salted per process"
+    if (isinstance(it, ast.Call) and isinstance(it.func, ast.Attribute)
+            and it.func.attr in ("values", "keys", "items")
+            and not it.args and not it.keywords):
+        return (f"dict .{it.func.attr}() order is insertion order, which "
+                "can differ across processes")
+    return None
+
+
+@register("nondeterminism-in-dist")
+def check(ctx: Context) -> Iterator[Finding]:
+    if not ctx.path.endswith(DIGEST_MODULES):
+        return
+    tail = ("breaks the bitwise cross-process/cross-repeat digest "
+            "contract of the async runtime")
+    for node in ast.walk(ctx.tree):
+        iters = []
+        if isinstance(node, ast.For):
+            iters = [node.iter]
+        elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                               ast.GeneratorExp)):
+            iters = [g.iter for g in node.generators]
+        for it in iters:
+            reason = _unordered_iter_reason(ctx, it)
+            if reason:
+                yield ctx.finding(
+                    "nondeterminism-in-dist", it,
+                    f"{reason}; feeding it into ordered application "
+                    f"{tail} — iterate sorted(...) instead")
+
+        if not isinstance(node, ast.Call):
+            continue
+        resolved = ctx.imports.resolve(node.func)
+        if resolved is None:
+            continue
+        if resolved == "time.time":
+            yield ctx.finding(
+                "nondeterminism-in-dist", node,
+                f"wall-clock time.time() in a digest-disciplined module "
+                f"{tail}; durations/deadlines use time.monotonic()")
+        elif resolved.startswith("random."):
+            yield ctx.finding(
+                "nondeterminism-in-dist", node,
+                f"module-level `random` state is process-global and "
+                f"unseeded here; {tail}. Use "
+                "np.random.default_rng((seed, proc))")
+        elif resolved.startswith("numpy.random."):
+            if resolved in _SEEDED_CTORS and (node.args or node.keywords):
+                continue    # explicitly seeded constructor: the blessed form
+            yield ctx.finding(
+                "nondeterminism-in-dist", node,
+                f"unseeded numpy RNG ({resolved.replace('numpy', 'np')}) "
+                f"{tail}; use np.random.default_rng((seed, proc))")

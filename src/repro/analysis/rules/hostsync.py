@@ -1,0 +1,85 @@
+"""host-sync-in-hot-loop: device→host syncs inside `@hot_loop` code.
+
+The bug class: the engine's decode loop originally fetched
+``[B, 1, vocab]`` logits every step and resolved every admission with a
+blocking scalar sync — PR 5 killed both (token-returning jitted steps,
+round-based admission, device mirrors: "the per-step fetch is [B] int32
+ids, never logits").  On a mesh, an accidental `np.asarray` of a
+sharded value is a cross-host gather *per step*; on a single host it
+still serializes the dispatch pipeline.
+
+The hot paths are marked in source with the `repro.utils.hot_loop`
+decorator (`Engine.step`, `Engine._admit_round`, `AsyncWorker.run` —
+the serve/engine.py step loops and dist/async_trainer.py event loop).
+Inside a marked function (including nested helpers defined in it) the
+rule flags the classic sync surfaces:
+
+  * ``np.asarray(...)`` / ``numpy.asarray(...)``
+  * ``jax.device_get(...)``
+  * ``<x>.item()``
+  * ``float(...)`` — scalar coercion; on a jax array it is a blocking
+    transfer (``int(...)`` is left alone: the hot loops legitimately
+    coerce already-fetched host numpy scalars with it)
+
+Intentional syncs (a step's token fetch IS its contract) carry a
+``# repro-lint: disable=host-sync-in-hot-loop -- <why>`` pragma, which
+keeps every sync in a hot loop visibly accounted for.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.core import Context, Finding, register
+
+_SYNC_CALLS = {
+    "numpy.asarray": "np.asarray materializes the value on host",
+    "jax.device_get": "jax.device_get is an explicit device->host copy",
+}
+_SCALAR_BUILTINS = {"float"}
+
+
+def _is_hot_loop_decorator(ctx: Context, dec: ast.AST) -> bool:
+    if isinstance(dec, ast.Call):
+        dec = dec.func
+    resolved = ctx.imports.resolve(dec)
+    return bool(resolved) and resolved.split(".")[-1] == "hot_loop"
+
+
+@register("host-sync-in-hot-loop")
+def check(ctx: Context) -> Iterator[Finding]:
+    hot_fns = [node for node in ast.walk(ctx.tree)
+               if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+               and any(_is_hot_loop_decorator(ctx, d)
+                       for d in node.decorator_list)]
+    seen = set()
+    for fn in hot_fns:
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call) or id(node) in seen:
+                continue
+            seen.add(id(node))
+            resolved = ctx.imports.resolve(node.func)
+            if resolved in _SYNC_CALLS:
+                yield ctx.finding(
+                    "host-sync-in-hot-loop", node,
+                    f"{_SYNC_CALLS[resolved]} — a blocking device sync "
+                    f"inside @hot_loop `{fn.name}`; keep device values on "
+                    "device (or pragma with a reason if this fetch is the "
+                    "step's contract)")
+            elif (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "item" and not node.args
+                    and not node.keywords):
+                yield ctx.finding(
+                    "host-sync-in-hot-loop", node,
+                    ".item() blocks on a device->host transfer inside "
+                    f"@hot_loop `{fn.name}`; batch the fetch or keep the "
+                    "value on device")
+            elif (isinstance(node.func, ast.Name)
+                    and node.func.id in _SCALAR_BUILTINS
+                    and node.func.id not in ctx.imports.names
+                    and len(node.args) == 1):
+                yield ctx.finding(
+                    "host-sync-in-hot-loop", node,
+                    f"{node.func.id}(...) coerces to a host scalar — on a "
+                    "jax array this is a blocking sync inside @hot_loop "
+                    f"`{fn.name}`; fetch once as an array instead")

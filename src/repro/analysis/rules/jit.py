@@ -1,0 +1,120 @@
+"""recompile-hazard: jit caches and call patterns that accumulate traces.
+
+The bug class: `BatchedServer._prefill_fns` (pre-PR 2) kept a dict of
+jitted prefill functions keyed by raw prompt length — every new length
+compiled a new executable, unboundedly.  PR 2's fix was to *bound the
+key space* (power-of-two length bucketing → O(log max_len) compiles);
+PR 3 applied the same discipline to block-table widths.  The hazard is
+structural, so the rule flags the structure:
+
+  * ``cache[key] = jax.jit(...)`` / ``cache.setdefault(key, jax.jit(...))``
+    — a dict-of-jitted-functions cache.  Fine *iff* the key space is
+    bounded; the rule can't prove that, so a bounded cache documents
+    itself with a pragma reason (see `Engine._shared_jit`), and an
+    unbounded one gets caught in review.
+  * ``jax.jit(...)`` lexically inside a ``for``/``while`` body — a
+    fresh jit wrapper per iteration defeats jax's trace cache unless
+    the result is itself cached (in which case see above).
+  * calling a jitted function with a list/dict/set literal in a
+    position declared static via ``static_argnums`` — unhashable
+    statics raise at best; hashable-but-fresh objects (tuples of
+    floats rebuilt per call, config dataclasses without __hash__ care)
+    re-trace every call.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Tuple
+
+from repro.analysis.core import Context, Finding, register
+
+
+def _is_jax_jit(ctx: Context, node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    resolved = ctx.imports.resolve(node.func)
+    return resolved in ("jax.jit", "jax.pjit", "jax.experimental.pjit.pjit")
+
+
+def _static_argnums(call: ast.Call) -> List[int]:
+    for kw in call.keywords:
+        if kw.arg == "static_argnums":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return [v.value]
+            if isinstance(v, (ast.Tuple, ast.List)):
+                out = []
+                for e in v.elts:
+                    if isinstance(e, ast.Constant) and isinstance(
+                            e.value, int):
+                        out.append(e.value)
+                    else:
+                        return []
+                return out
+    return []
+
+
+_UNHASHABLE = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+               ast.SetComp, ast.GeneratorExp)
+
+
+@register("recompile-hazard")
+def check(ctx: Context) -> Iterator[Finding]:
+    # name -> static arg positions, for jitted fns assigned in this file
+    jitted_statics: Dict[str, List[int]] = {}
+
+    for node in ast.walk(ctx.tree):
+        if _is_jax_jit(ctx, node):
+            # (a) dict-of-jitted-fns cache
+            parent = ctx.parent(node)
+            if (isinstance(parent, ast.Assign)
+                    and any(isinstance(t, ast.Subscript)
+                            for t in parent.targets)):
+                yield ctx.finding(
+                    "recompile-hazard", node,
+                    "jitted function stored under a dict key: executables "
+                    "accumulate per distinct key (the BatchedServer."
+                    "_prefill_fns bug). Bound the key space (pow2 "
+                    "bucketing) and say so in a pragma reason")
+            elif (isinstance(parent, ast.Call)
+                    and isinstance(parent.func, ast.Attribute)
+                    and parent.func.attr == "setdefault"):
+                yield ctx.finding(
+                    "recompile-hazard", node,
+                    "jitted function setdefault'd into a dict: executables "
+                    "accumulate per distinct key. Bound the key space and "
+                    "say so in a pragma reason")
+            # (b) jit construction inside a loop body
+            for anc in ctx.ancestors(node):
+                if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    break       # defs re-scope: stop at the nearest one
+                if isinstance(anc, (ast.For, ast.While)):
+                    yield ctx.finding(
+                        "recompile-hazard", node,
+                        "jax.jit(...) constructed inside a loop: each "
+                        "iteration builds a fresh wrapper whose trace "
+                        "cache starts empty; hoist the jit out of the "
+                        "loop")
+                    break
+            # record static_argnums for assigned names
+            statics = _static_argnums(node)
+            if statics and isinstance(parent, ast.Assign):
+                for t in parent.targets:
+                    if isinstance(t, ast.Name):
+                        jitted_statics[t.id] = statics
+
+    if not jitted_statics:
+        return
+    # (c) unhashable literals in static positions at call sites
+    for node in ast.walk(ctx.tree):
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id in jitted_statics):
+            for pos in jitted_statics[node.func.id]:
+                if pos < len(node.args) and isinstance(
+                        node.args[pos], _UNHASHABLE):
+                    yield ctx.finding(
+                        "recompile-hazard", node.args[pos],
+                        f"argument {pos} of `{node.func.id}` is declared "
+                        "static (static_argnums) but this call passes an "
+                        "unhashable literal; statics must be hashable and "
+                        "stable across calls or every call re-traces")

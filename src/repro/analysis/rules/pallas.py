@@ -1,0 +1,177 @@
+"""pallas-kernel-contract: BlockSpec index_map arity / block-shape rank.
+
+The bug class: a Pallas `BlockSpec` index_map is called with one
+argument per grid dimension — plus one per scalar-prefetch operand
+under `pltpu.PrefetchScalarGridSpec` — and must return one index per
+block-shape dimension.  Nothing checks this at Python import time: an
+arity mismatch surfaces as an opaque trace-time TypeError (at best) or
+silently wrong DMA indexing in interpret mode, and the failure sites
+are far from the edit (the grid is computed lines above the specs).
+Every `pl.pallas_call` in `kernels/` rides this contract, e.g. the
+paged decode kernel's block-table gather where the index_map arity is
+grid(2) + prefetch(2) = 4.
+
+Checked per `pl.pallas_call(...)` site (skipping whatever can't be
+resolved statically — literal tuples and same-scope name assignments
+are followed; dynamic specs are not guessed at):
+
+  * every `BlockSpec(shape, index_map)` in `in_specs` / `out_specs`
+    (given directly or inside a `grid_spec=pltpu.PrefetchScalarGridSpec`)
+    has index_map arity == grid rank + num_scalar_prefetch
+    (lambda defaults like ``lambda h, qi, ki, g=group:`` don't count);
+  * the index_map returns as many indices as the block shape has
+    dimensions.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Tuple
+
+from repro.analysis.core import Context, Finding, register
+
+
+def _resolve_value(ctx: Context, node: ast.AST, at: ast.AST,
+                   depth: int = 0) -> Optional[ast.AST]:
+    """Chase Name -> same-scope assignment chains (bounded)."""
+    while isinstance(node, ast.Name) and depth < 4:
+        nxt = ctx.lookup_assignment(node.id, at)
+        if nxt is None:
+            return node
+        node, depth = nxt, depth + 1
+    return node
+
+
+def _grid_rank(ctx: Context, grid: ast.AST, at: ast.AST) -> Optional[int]:
+    grid = _resolve_value(ctx, grid, at)
+    if isinstance(grid, (ast.Tuple, ast.List)):
+        return len(grid.elts)
+    if isinstance(grid, ast.Constant) and isinstance(grid.value, int):
+        return 1
+    return None
+
+
+def _kwarg(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _index_map_arity(ctx: Context, fn: ast.AST,
+                     at: ast.AST) -> Optional[int]:
+    fn = _resolve_value(ctx, fn, at)
+    if isinstance(fn, ast.Lambda):
+        a = fn.args
+        if a.vararg or a.kwonlyargs or a.kwarg:
+            return None
+        return len(a.args) - len(a.defaults)
+    if isinstance(fn, ast.Name):
+        target = ctx.lookup_assignment(fn.id, at)
+        if isinstance(target, ast.Lambda):
+            return _index_map_arity(ctx, target, at)
+    return None
+
+
+def _index_map_return_len(ctx: Context, fn: ast.AST,
+                          at: ast.AST) -> Optional[int]:
+    fn = _resolve_value(ctx, fn, at)
+    if isinstance(fn, ast.Lambda):
+        if isinstance(fn.body, ast.Tuple):
+            return len(fn.body.elts)
+        if isinstance(fn.body, ast.Starred):
+            return None
+        return 1
+    return None
+
+
+def _blockspecs(ctx: Context, node: Optional[ast.AST],
+                at: ast.AST) -> List[ast.Call]:
+    """Flatten an in_specs/out_specs expression into BlockSpec calls."""
+    if node is None:
+        return []
+    node = _resolve_value(ctx, node, at)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out: List[ast.Call] = []
+        for e in node.elts:
+            out.extend(_blockspecs(ctx, e, at))
+        return out
+    if isinstance(node, ast.Call):
+        resolved = ctx.imports.resolve(node.func)
+        if resolved and resolved.split(".")[-1] == "BlockSpec":
+            return [node]
+    return []
+
+
+def _spec_shape_len(spec: ast.Call) -> Optional[int]:
+    shape = _kwarg(spec, "block_shape")
+    if shape is None and spec.args:
+        shape = spec.args[0]
+    if isinstance(shape, (ast.Tuple, ast.List)):
+        return len(shape.elts)
+    return None
+
+
+def _spec_index_map(spec: ast.Call) -> Optional[ast.AST]:
+    im = _kwarg(spec, "index_map")
+    if im is None and len(spec.args) >= 2:
+        im = spec.args[1]
+    return im
+
+
+@register("pallas-kernel-contract")
+def check(ctx: Context) -> Iterator[Finding]:
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        resolved = ctx.imports.resolve(node.func)
+        if not resolved or resolved.split(".")[-1] != "pallas_call":
+            continue
+
+        grid = _kwarg(node, "grid")
+        in_specs = _kwarg(node, "in_specs")
+        out_specs = _kwarg(node, "out_specs")
+        n_prefetch = 0
+
+        grid_spec = _kwarg(node, "grid_spec")
+        if grid_spec is not None:
+            gs = _resolve_value(ctx, grid_spec, node)
+            if not isinstance(gs, ast.Call):
+                continue        # opaque grid_spec: nothing to check
+            grid = _kwarg(gs, "grid")
+            in_specs = _kwarg(gs, "in_specs")
+            out_specs = _kwarg(gs, "out_specs")
+            np_kw = _kwarg(gs, "num_scalar_prefetch")
+            if np_kw is not None:
+                if not (isinstance(np_kw, ast.Constant)
+                        and isinstance(np_kw.value, int)):
+                    continue    # dynamic prefetch count: can't check arity
+                n_prefetch = np_kw.value
+
+        rank = None if grid is None else _grid_rank(ctx, grid, node)
+        specs = (_blockspecs(ctx, in_specs, node)
+                 + _blockspecs(ctx, out_specs, node))
+        for spec in specs:
+            im = _spec_index_map(spec)
+            if im is None:
+                continue
+            arity = _index_map_arity(ctx, im, node)
+            if rank is not None and arity is not None \
+                    and arity != rank + n_prefetch:
+                want = f"{rank} grid indices"
+                if n_prefetch:
+                    want += f" + {n_prefetch} scalar-prefetch ref(s)"
+                yield ctx.finding(
+                    "pallas-kernel-contract", im if hasattr(im, "lineno")
+                    else spec,
+                    f"BlockSpec index_map takes {arity} positional "
+                    f"parameter(s) but this pallas_call's grid supplies "
+                    f"{want} ({rank + n_prefetch} total)")
+            shape_len = _spec_shape_len(spec)
+            ret_len = _index_map_return_len(ctx, im, node)
+            if shape_len is not None and ret_len is not None \
+                    and shape_len != ret_len:
+                yield ctx.finding(
+                    "pallas-kernel-contract", spec,
+                    f"BlockSpec block_shape has {shape_len} dimension(s) "
+                    f"but its index_map returns {ret_len} index/indices — "
+                    "every block dimension needs exactly one index")

@@ -1,0 +1,58 @@
+"""quadratic-queue: `list.pop(0)` / `list.insert(0, ...)` hot queues.
+
+The bug class: the engine's admission queue shipped as a list drained
+with ``pop(0)`` (fixed to `deque.popleft` in PR 3) and the recompute
+replay queue re-introduced the same pattern (fixed in PR 6 with a
+long-replay regression test).  Both are O(n) per operation — a queue
+drained element-wise goes quadratic exactly when it gets long, i.e.
+under the load the serving path exists for.
+
+Flagged:
+
+  * ``<anything>.pop(0)`` — also a latent TypeError if the receiver is
+    later migrated to a `deque` (whose ``pop()`` takes no index), which
+    is how half-finished deque migrations break.
+  * ``<anything>.insert(0, x)`` — except ``sys.path.insert(0, ...)``,
+    the standard (cold-path) import-path idiom.
+
+Fix: `collections.deque` with ``popleft()`` / ``appendleft()``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.core import Context, Finding, register
+
+
+def _is_const_zero(node: ast.AST) -> bool:
+    return isinstance(node, ast.Constant) and node.value == 0 \
+        and not isinstance(node.value, bool)
+
+
+def _is_sys_path(receiver: ast.AST) -> bool:
+    return (isinstance(receiver, ast.Attribute) and receiver.attr == "path"
+            and isinstance(receiver.value, ast.Name)
+            and receiver.value.id == "sys")
+
+
+@register("quadratic-queue")
+def check(ctx: Context) -> Iterator[Finding]:
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)):
+            continue
+        recv = node.func.value
+        if (node.func.attr == "pop" and len(node.args) == 1
+                and not node.keywords and _is_const_zero(node.args[0])):
+            yield ctx.finding(
+                "quadratic-queue", node,
+                ".pop(0) is O(n) per element on a list (and a TypeError "
+                "on a deque); use collections.deque.popleft()")
+        elif (node.func.attr == "insert" and len(node.args) == 2
+                and _is_const_zero(node.args[0])
+                and not _is_sys_path(recv)):
+            yield ctx.finding(
+                "quadratic-queue", node,
+                ".insert(0, ...) is O(n) per element on a list; use "
+                "collections.deque.appendleft()")

@@ -1,0 +1,96 @@
+"""wall-clock-duration: `time.time()` measuring a duration or deadline.
+
+The bug class: PR 6 swept every duration/deadline in `src/` to
+`time.monotonic()` after wall-clock (`time.time()`) durations were found
+in `utils/logging`, `launch/serve`, `launch/dryrun`, and the serve_mesh
+parent deadline — wall clocks step under NTP, so `t1 - t0` can be
+negative or wildly wrong, and a stepped deadline hangs or fires early.
+The sweep missed `benchmarks/` and `examples/` (fixed alongside this
+rule), which is exactly why the invariant is now machine-checked.
+
+Flagged — a `time.time()` value in *arithmetic or comparison position*:
+
+  * ``time.time() - t0`` / ``deadline = time.time() + 30``
+  * ``wall += time.time()`` (aug-assign accumulation)
+  * ``if time.time() > deadline`` (comparisons)
+  * ``t1 - t0`` / ``now > deadline`` where either name was assigned
+    from ``time.time()`` in the same scope
+
+Not flagged — bare timestamping (``{"timestamp": time.time()}``), which
+is the one legitimate wall-clock use.  `time.monotonic()` /
+`time.perf_counter()` are the fixes and never flagged.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from repro.analysis.core import Context, Finding, register
+
+_MSG = ("time.time() in {what} position measures a duration with the "
+        "wall clock, which NTP can step; use time.monotonic() "
+        "(time.perf_counter() for fine-grained benchmarks)")
+
+
+def _is_wall_clock(ctx: Context, node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call) and not node.args
+            and not node.keywords
+            and ctx.imports.resolve(node.func) == "time.time")
+
+
+def _scope_tainted_names(ctx: Context, scope: ast.AST) -> Set[str]:
+    """Names assigned from time.time() directly within `scope` (not in
+    nested function defs — those are their own scopes)."""
+    names: Set[str] = set()
+    for node in ast.walk(scope):
+        if node is not scope and isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if (isinstance(node, ast.Assign) and _is_wall_clock(ctx, node.value)
+                and ctx.enclosing_scope(node) is scope):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    names.add(t.id)
+    return names
+
+
+@register("wall-clock-duration")
+def check(ctx: Context) -> Iterator[Finding]:
+    tainted_by_scope = {}
+
+    def tainted(node: ast.AST) -> Set[str]:
+        scope = ctx.enclosing_scope(node)
+        if scope not in tainted_by_scope:
+            tainted_by_scope[scope] = _scope_tainted_names(ctx, scope)
+        return tainted_by_scope[scope]
+
+    def names_in(*nodes: ast.AST) -> Set[str]:
+        out: Set[str] = set()
+        for n in nodes:
+            if isinstance(n, ast.Name):
+                out.add(n.id)
+        return out
+
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.BinOp) and isinstance(
+                node.op, (ast.Add, ast.Sub)):
+            direct = (_is_wall_clock(ctx, node.left)
+                      or _is_wall_clock(ctx, node.right))
+            via_name = (isinstance(node.op, ast.Sub)
+                        and names_in(node.left, node.right)
+                        & tainted(node))
+            if direct or via_name:
+                what = "arithmetic (duration/deadline)"
+                yield ctx.finding("wall-clock-duration", node,
+                                  _MSG.format(what=what))
+        elif isinstance(node, ast.Compare):
+            operands = [node.left] + list(node.comparators)
+            if (any(_is_wall_clock(ctx, o) for o in operands)
+                    or names_in(*operands) & tainted(node)):
+                yield ctx.finding("wall-clock-duration", node,
+                                  _MSG.format(what="comparison (deadline)"))
+        elif isinstance(node, ast.AugAssign) and isinstance(
+                node.op, (ast.Add, ast.Sub)):
+            if _is_wall_clock(ctx, node.value):
+                yield ctx.finding("wall-clock-duration", node,
+                                  _MSG.format(what="accumulation"))

@@ -51,6 +51,7 @@ from repro.dist.async_comm import decode as _dec_blob
 from repro.dist.async_comm import encode as _enc_blob
 from repro.dist.async_schedule import (
     agent_shard, build_schedule, walk_sequence)
+from repro.utils.hotpath import hot_loop
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,6 +140,7 @@ class AsyncWorker:
 
     # -- the event loop -------------------------------------------------------
 
+    @hot_loop
     def run(self) -> AsyncResult:
         cfg = self.cfg
         speed = self.speeds[self.proc]
@@ -230,6 +232,8 @@ class AsyncWorker:
         # objective evaluation is post-hoc, off the clock: consensus
         # snapshots were recorded per sync, evaluated here
         for rec in trace:
+            # repro-lint: disable=host-sync-in-hot-loop -- post-hoc trace
+            # evaluation after the timed loop ended (off the clock by design)
             rec["objective"] = float(L.global_objective(
                 self.method.problem, rec.pop("consensus")))
 

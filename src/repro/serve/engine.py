@@ -109,6 +109,7 @@ import numpy as np
 
 from repro.serve.bucketing import bucket_length, chunks_needed
 from repro.serve.paging import BlockAllocator, blocks_needed
+from repro.utils.hotpath import hot_loop
 
 _PREFILL_FLOOR = 8      # smallest prompt bucket (keeps compile count tiny)
 _ADMIT_WATERMARK = 1    # spare blocks optimistic admission leaves free
@@ -142,6 +143,8 @@ def _shared_jit(model, name, donate_argnums=()):
     per_model = _JIT_CACHE.setdefault(model, {})
     key = (name, donate_argnums)
     if key not in per_model:
+        # repro-lint: disable=recompile-hazard -- key space is (entry-point
+        # name, donation flag): a handful of entries per model, bounded
         per_model[key] = jax.jit(getattr(model, name),
                                  donate_argnums=donate_argnums)
     return per_model[key]
@@ -597,6 +600,7 @@ class Engine:
                                                 watermark=_ADMIT_WATERMARK)
         return self._allocator.can_allocate(worst)
 
+    @hot_loop
     def _admit_round(self, finished: List[Request]) -> bool:
         """One admission round: launch a prefill into every admissible
         free slot (back-to-back, no host sync between launches), then
@@ -628,6 +632,9 @@ class Engine:
             # every prefill is already in flight; the first fetch waits
             # on the first prefill while the rest keep computing
             t1 = time.perf_counter()
+            # repro-lint: disable=host-sync-in-hot-loop -- batched
+            # first-token resolution: ONE wait per admission round after
+            # every prefill is in flight (the PR 5 contract)
             toks = [int(np.asarray(tok_dev)) for _, _, tok_dev in pending]
             self._stats["prefill_wait_s"] += time.perf_counter() - t1
             for (req, slot, _), tok in zip(pending, toks):
@@ -636,6 +643,7 @@ class Engine:
                     finished.append(f)
         return admitted
 
+    @hot_loop
     def step(self) -> List[Request]:
         """Admit queued requests into free slots, then run ONE decode
         step over the batch; returns the requests finished by this step.
@@ -729,6 +737,8 @@ class Engine:
         # logits never leave the device, which on a mesh would be a
         # model-sharded cross-host gather)
         self._cur_dev = toks_dev
+        # repro-lint: disable=host-sync-in-hot-loop -- this [B] int32 token
+        # fetch IS the per-step device->host contract (never logits)
         nxt = np.asarray(toks_dev)
         self._stats["decode_steps"] += 1
         self._stats["decode_s"] += time.perf_counter() - t0

@@ -1,1 +1,4 @@
 from repro.utils import pytree
+from repro.utils.hotpath import hot_loop
+
+__all__ = ["pytree", "hot_loop"]

@@ -1,0 +1,20 @@
+"""Hot-path markers consumed by `repro.analysis`.
+
+`hot_loop` is a zero-cost identity decorator that marks a function as a
+latency-critical host loop — the serving engine's per-step path and the
+async trainer's event loop.  It changes nothing at runtime; it exists
+so the `host-sync-in-hot-loop` lint rule knows where accidental
+device→host syncs (`np.asarray`, `.item()`, `float()` of a device
+value, `jax.device_get`) are regressions rather than ordinary code.
+Intentional syncs inside a marked function (e.g. a decode step's [B]
+int32 token fetch, which IS the step's contract) carry a
+`# repro-lint: disable=host-sync-in-hot-loop -- <reason>` pragma, so
+every sync on a hot path is visibly accounted for.
+"""
+from __future__ import annotations
+
+
+def hot_loop(fn):
+    """Mark `fn` as a hot host loop (lint marker; identity at runtime)."""
+    fn.__hot_loop__ = True
+    return fn
