@@ -21,8 +21,26 @@ JSON also records the per-decode-step device→host transfer
 (`decode_fetch`): `[max_batch]` int32 greedy token ids — never
 `[B, 1, vocab]` logits, which on this mesh would be a model-sharded
 cross-host gather every step (the straggler convoy the paper warns
-about).  `--check` gates on completion, cross-process agreement
-(enforced by the driver), and the fetch being token-ids-not-logits.
+about).
+
+The `poisson` section measures the overlapped admission scheduler
+against the serialized baseline under load: seeded Poisson arrivals on
+a pure model-parallel mesh (data=1, model=processes — the topology
+where the fused mixed step shares each layer's cross-process
+collectives between decode and prefill, so admission rides the decode
+launches nearly free).  Three arms per run — arena, paged, and paged
+with a deliberately starved block pool (forces preemption while
+admissions are in flight) — each timed serialized vs overlapped with
+identical arrival schedules.  Overlap must not change a single output
+bit: the per-process output digest of every overlapped run must equal
+its serialized baseline's, preemption-during-overlap included.
+
+`--check` gates on completion, cross-process agreement (enforced by
+the driver), the fetch being token-ids-not-logits, serialized==
+overlapped digests on all three Poisson arms, overlapped throughput
+strictly above serialized on both backends (ample-pool arms), both
+tight-pool runs actually preempting, and the overlap-mode counters
+being coherent (mixed steps iff fused, overlapped admissions > 0).
 """
 from __future__ import annotations
 
@@ -37,20 +55,11 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(ROOT, "src")
 
 
-def run_arm(args, paged: bool, tmp_out: str) -> dict:
+def _serve_mesh(args, tmp_out: str, extra: list, label: str) -> dict:
     cmd = [sys.executable, "-m", "repro.launch.serve_mesh",
            "--processes", str(args.processes),
-           "--local-devices", str(args.local_devices),
-           "--model-parallel", str(args.model_parallel),
-           "--requests", str(args.requests),
-           "--max-batch", str(args.max_batch),
-           "--prompt-len", str(args.prompt_len),
-           "--new-tokens", str(args.new_tokens),
-           "--mixed",
            "--timeout", str(args.timeout),
-           "--out", tmp_out]
-    if paged:
-        cmd += ["--paged", "--block-size", str(args.block_size)]
+           "--out", tmp_out] + extra
     env = dict(os.environ)
     env["PYTHONPATH"] = (SRC + os.pathsep + env["PYTHONPATH"]
                          if env.get("PYTHONPATH") else SRC)
@@ -59,13 +68,74 @@ def run_arm(args, paged: bool, tmp_out: str) -> dict:
     sys.stdout.write(res.stdout)
     if res.returncode != 0:
         sys.stdout.write(res.stderr)
-        raise RuntimeError(
-            f"serve_mesh {'paged' if paged else 'arena'} arm failed "
-            f"(rc {res.returncode})")
+        raise RuntimeError(f"serve_mesh {label} arm failed "
+                           f"(rc {res.returncode})")
     with open(tmp_out) as f:
         arm = json.load(f)
+    os.remove(tmp_out)
     arm["all_processes_bitwise_equal"] = True    # driver exits 1 otherwise
     return arm
+
+
+def run_arm(args, paged: bool, tmp_out: str) -> dict:
+    extra = ["--local-devices", str(args.local_devices),
+             "--model-parallel", str(args.model_parallel),
+             "--requests", str(args.requests),
+             "--max-batch", str(args.max_batch),
+             "--prompt-len", str(args.prompt_len),
+             "--new-tokens", str(args.new_tokens),
+             "--mixed"]
+    if paged:
+        extra += ["--paged", "--block-size", str(args.block_size)]
+    return _serve_mesh(args, tmp_out, extra,
+                       "paged" if paged else "arena")
+
+
+def run_poisson(args, out_stem: str) -> dict:
+    """The overlapped-vs-serialized Poisson arm: identical seeded
+    arrival schedules, pure model-parallel mesh (data=1 — a data axis
+    has nothing to shard in the [1, B+S, D] mixed batch, so overlap
+    there falls back to async composition and the fused-collective win
+    this arm measures disappears).  The tight-pool run starves the
+    paged allocator below the workload's steady-state block demand so
+    preemption fires while overlapped admissions are in flight — the
+    digest gate's hardest case."""
+    p = args.poisson
+    base = ["--local-devices", "1",
+            "--model-parallel", str(args.processes),
+            "--requests", str(p["requests"]),
+            "--max-batch", str(p["max_batch"]),
+            "--prompt-len", str(p["prompt_len"]),
+            "--new-tokens", str(p["new_tokens"]),
+            "--arrival-rate", str(p["arrival_rate"])]
+    paged = ["--paged", "--block-size", str(args.block_size)]
+    tight = paged + ["--num-blocks", str(p["tight_blocks"])]
+    out = {"arrival_rate": p["arrival_rate"],
+           "mesh": {"data": 1, "model": args.processes},
+           "workload": dict(p)}
+    for key, extra in (("arena", []), ("paged", paged),
+                       ("paged_tight", tight)):
+        arms = {}
+        for mode, flag in (("serialized", ["--no-overlap"]),
+                           ("overlapped", [])):
+            arms[mode] = _serve_mesh(
+                args, f"{out_stem}.poisson.{key}.{mode}.tmp",
+                base + extra + flag, f"poisson/{key}/{mode}")
+        ser, ov = arms["serialized"], arms["overlapped"]
+        arms["digests_equal"] = (ov["output_digest"]
+                                 == ser["output_digest"])
+        arms["overlap_speedup"] = round(
+            ov["derived"]["throughput_tok_s"]
+            / max(ser["derived"]["throughput_tok_s"], 1e-12), 4)
+        out[key] = arms
+        print(f"poisson/{key:12s}: overlapped "
+              f"{ov['derived']['throughput_tok_s']:.2f} tok/s vs "
+              f"serialized {ser['derived']['throughput_tok_s']:.2f} "
+              f"(speedup {arms['overlap_speedup']:.2f}x, digests "
+              f"{'equal' if arms['digests_equal'] else 'DIVERGED'}, "
+              f"preempt ov/ser {ov['engine_stats']['preemptions']}"
+              f"/{ser['engine_stats']['preemptions']})")
+    return out
 
 
 def main():
@@ -91,6 +161,15 @@ def main():
     args.new_tokens = 12 if args.quick else 32
     if args.max_batch is None:
         args.max_batch = 4 if args.quick else 8
+    # Poisson arm: its own (smaller) workload — under-load scheduling
+    # behavior, not raw step timing, is what it isolates.  tight_blocks
+    # sits below the steady-state demand of max_batch full-length rows
+    # (4 rows x 2 blocks here) so the tight arm must preempt.
+    pb, pn = 4, 16
+    steady = pb * ((8 + pn + args.block_size - 1) // args.block_size)
+    args.poisson = {"requests": 8 if args.quick else 16,
+                    "prompt_len": 8, "new_tokens": pn, "max_batch": pb,
+                    "arrival_rate": 0.6, "tight_blocks": steady - 3}
 
     results = {
         "benchmark": "mesh_serving_admission_vs_decode",
@@ -107,12 +186,13 @@ def main():
         # not be the cwd this script (and its --out) resolves against
         tmp = os.path.abspath(args.out) + f".{key}.tmp"
         results[key] = run_arm(args, paged, tmp)
-        os.remove(tmp)
         d = results[key]["derived"]
         print(f"{key:6s}: admission {d['admission_ms_per_admission']:.2f} "
               f"ms/req vs decode step {d['decode_step_ms']:.2f} ms "
               f"(ratio {d['admission_over_decode_step']:.2f}); "
               f"uploads/step {d['h2d_uploads_per_decode_step']:.2f}")
+
+    results["poisson"] = run_poisson(args, os.path.abspath(args.out))
 
     fetch = results["arena"]["engine_stats"]
     results["decode_fetch"] = {
@@ -145,6 +225,33 @@ def main():
         ok &= results["arena"]["free_blocks"] is None
         ok &= (results["paged"]["free_blocks"]
                == results["paged"]["num_blocks"])
+        pois = results["poisson"]
+        for key in ("arena", "paged", "paged_tight"):
+            arm = pois[key]
+            ser, ov = arm["serialized"], arm["overlapped"]
+            # overlap must never cost a bit: every overlapped run
+            # reproduces its serialized baseline's output digest
+            ok &= arm["digests_equal"]
+            ok &= ser["completed"] == ov["completed"] \
+                == pois["workload"]["requests"]
+            # counter coherence: overlap actually deferred admissions,
+            # and mixed launches appear exactly in fused mode
+            ovs = ov["engine_stats"]
+            ok &= ovs["overlapped_admissions"] > 0
+            ok &= ((ovs["mixed_steps"] > 0)
+                   == (ovs["overlap_mode"] == "fused"))
+            ok &= ser["engine_stats"]["overlap_mode"] == ""
+        for key in ("arena", "paged"):
+            # the perf claim, gated on the ample-pool arms (the tight
+            # arm's preemption-recompute churn dominates its timing)
+            ok &= pois[key]["overlap_speedup"] > 1.0
+            ok &= pois[key]["serialized"]["engine_stats"][
+                "preemptions"] == 0
+        tight = pois["paged_tight"]
+        # the starved pool must actually preempt in BOTH modes — digest
+        # equality above then covers preemption-during-overlap
+        ok &= tight["serialized"]["engine_stats"]["preemptions"] > 0
+        ok &= tight["overlapped"]["engine_stats"]["preemptions"] > 0
         if not ok:
             print("FAIL: mesh serving bench invariants violated")
             sys.exit(1)

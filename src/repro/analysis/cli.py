@@ -1,6 +1,7 @@
 """Command line for the static-analysis pass.
 
-    PYTHONPATH=src python -m repro.analysis [--check] [--json out] paths...
+    PYTHONPATH=src python -m repro.analysis [--check] [--fix] [--json out] \
+        paths...
 
 Exit codes: 0 = clean (or findings without --check), 1 = findings under
 --check, 2 = usage/baseline errors.  The JSON report always records
@@ -43,6 +44,10 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="files or directories to lint (default: src)")
     ap.add_argument("--check", action="store_true",
                     help="exit non-zero if any unsuppressed finding remains")
+    ap.add_argument("--fix", action="store_true",
+                    help="apply the decidable autofixes in place "
+                         "(wall-clock-duration, quadratic-queue; see "
+                         "repro.analysis.fixes) before reporting")
     ap.add_argument("--json", metavar="OUT",
                     help="write the full JSON report (active + suppressed) "
                          "to OUT ('-' for stdout)")
@@ -61,6 +66,13 @@ def main(argv: Optional[List[str]] = None) -> int:
             doc = (RULE_DOCS.get(name) or "").strip().splitlines()
             print(f"{name}: {doc[0] if doc else ''}")
         return 0
+
+    if args.fix:
+        from repro.analysis.fixes import fix_paths
+        changed, fixes, errors = fix_paths(args.paths)
+        print(f"--fix: {fixes} fix(es) applied in {changed} file(s)")
+        for e in errors:
+            print(e, file=sys.stderr)
 
     report = run_paths(args.paths)
 

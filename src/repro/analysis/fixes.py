@@ -1,0 +1,305 @@
+"""Autofixes for the mechanically-correctable rules (``--fix``).
+
+Two rules have fixes whose correctness is decidable from the file
+alone, so the CLI can apply them instead of just reporting:
+
+  * **wall-clock-duration** — rewrite the offending ``<mod>.time()``
+    call to ``<mod>.monotonic()``.  Only calls implicated in an active
+    finding are touched: calls inside a flagged expression's span, and
+    the assignment sites of names that flow into one (``t0 =
+    time.time()`` feeding a flagged ``t1 - t0``).  Bare timestamping
+    (``{"ts": time.time()}``) is the legitimate wall-clock use and is
+    never rewritten.  Bare-name calls from ``from time import time``
+    are left alone (the fix would need an import rewrite whose blast
+    radius exceeds a lint pass); the finding stays and a human picks
+    the spelling.
+
+  * **quadratic-queue** — rewrite ``q.pop(0)`` to ``q.popleft()`` and
+    ``q.insert(0, x)`` to ``q.appendleft(x)``, but ONLY when the
+    receiver is provably a deque or provably a rewritable list:
+
+      - receiver assigned from ``deque(...)``: method rewrite only;
+      - receiver assigned from ``[]`` / ``list(...)`` everywhere it is
+        initialized: method rewrite plus constructor rewrite to
+        ``deque(...)``, plus a ``from collections import deque`` import
+        if the file lacks one.  A receiver with any non-rewritable
+        initialization (a populated literal is fine; an unknown call is
+        not) is skipped — silently "fixing" a real list into broken
+        method calls is worse than the O(n) pop.
+
+    Both ``name`` receivers (lexical lookup) and ``self.attr``
+    receivers (any ``self.attr = ...`` assignment in the file) are
+    chased.
+
+Fixes are span-based source edits applied in descending offset order,
+so line/col anchors never shift under earlier edits.  Pragma-suppressed
+findings are not fixed (the pragma documents intent).  ``fix_source``
+is idempotent: running it on its own output yields zero edits
+(tests/test_analysis.py pins this).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from repro.analysis.core import RULES, Context
+from repro.analysis.pragmas import parse_pragmas
+from repro.analysis.rules.timing import _is_wall_clock
+
+
+def _line_offsets(source: str) -> List[int]:
+    offs = [0]
+    for ln in source.splitlines(keepends=True):
+        offs.append(offs[-1] + len(ln))
+    return offs
+
+
+def _span(offs: List[int], node: ast.AST) -> Tuple[int, int]:
+    return (offs[node.lineno - 1] + node.col_offset,
+            offs[node.end_lineno - 1] + node.end_col_offset)
+
+
+def _src(source: str, offs: List[int], node: ast.AST) -> str:
+    s, e = _span(offs, node)
+    return source[s:e]
+
+
+# ---------------------------------------------------------------------------
+# wall-clock-duration
+# ---------------------------------------------------------------------------
+
+
+def _wall_clock_edits(ctx: Context, pragmas, source: str,
+                      offs: List[int]) -> Iterator[Tuple[int, int, str]]:
+    spans = [(f.line, f.end_line)
+             for f in RULES["wall-clock-duration"](ctx)
+             if not pragmas.disables("wall-clock-duration",
+                                     f.line, f.end_line)]
+    if not spans:
+        return
+
+    def in_flagged(node: ast.AST) -> bool:
+        lo = getattr(node, "lineno", 0)
+        hi = getattr(node, "end_lineno", lo) or lo
+        return any(a <= lo and hi <= b for a, b in spans)
+
+    # names read inside a flagged span, per scope: their time.time()
+    # assignment sites are the duration's other operand and must move
+    # to the same clock
+    implicated = set()
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Name) and in_flagged(node):
+            implicated.add((ctx.enclosing_scope(node), node.id))
+
+    for node in ast.walk(ctx.tree):
+        if not (_is_wall_clock(ctx, node)
+                and isinstance(node.func, ast.Attribute)):
+            continue
+        fix = in_flagged(node)
+        if not fix:
+            parent = ctx.parent(node)
+            if isinstance(parent, ast.Assign):
+                scope = ctx.enclosing_scope(parent)
+                fix = any(isinstance(t, ast.Name)
+                          and (scope, t.id) in implicated
+                          for t in parent.targets)
+        if fix:
+            s, e = _span(offs, node.func)
+            yield s, e, _src(source, offs, node.func.value) + ".monotonic"
+
+
+# ---------------------------------------------------------------------------
+# quadratic-queue
+# ---------------------------------------------------------------------------
+
+
+def _receiver_key(recv: ast.AST) -> Optional[Tuple[str, ...]]:
+    """Identity of a fixable receiver: ("name", n) or ("self", attr)."""
+    if isinstance(recv, ast.Name):
+        return ("name", recv.id)
+    if (isinstance(recv, ast.Attribute) and isinstance(recv.value, ast.Name)
+            and recv.value.id == "self"):
+        return ("self", recv.attr)
+    return None
+
+
+def _init_sites(ctx: Context, key: Tuple[str, ...]) -> List[ast.expr]:
+    """Every value ever assigned to the receiver in this file."""
+    sites: List[ast.expr] = []
+    for node in ast.walk(ctx.tree):
+        targets: List[ast.expr] = []
+        value = None
+        if isinstance(node, ast.Assign):
+            targets, value = node.targets, node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets, value = [node.target], node.value
+        for t in targets:
+            if _receiver_key(t) == key and value is not None:
+                sites.append(value)
+    return sites
+
+
+def _is_deque_ctor(ctx: Context, node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call)
+            and ctx.imports.resolve(node.func) in ("collections.deque",
+                                                   "deque"))
+
+
+def _list_ctor_rewrite(ctx: Context, source: str, offs: List[int],
+                       node: ast.AST) -> Optional[str]:
+    """deque(...) replacement text for a rewritable list initializer."""
+    if isinstance(node, ast.List):
+        if not node.elts:
+            return "deque()"
+        return "deque(" + _src(source, offs, node) + ")"
+    if (isinstance(node, ast.Call)
+            and ctx.imports.resolve(node.func) == "list"
+            and not node.keywords and len(node.args) <= 1):
+        inner = _src(source, offs, node.args[0]) if node.args else ""
+        return f"deque({inner})"
+    return None
+
+
+def _queue_edits(ctx: Context, pragmas, source: str, offs: List[int],
+                 flags: Dict[str, bool]) -> Iterator[Tuple[int, int, str]]:
+    findings = [f for f in RULES["quadratic-queue"](ctx)
+                if not pragmas.disables("quadratic-queue",
+                                        f.line, f.end_line)]
+    if not findings:
+        return
+    flagged_lines = {f.line for f in findings}
+
+    # classify receivers once: "deque" (method rewrite), "list"
+    # (method + ctor rewrite), None (skip)
+    kinds: Dict[Tuple[str, ...], Optional[str]] = {}
+    ctor_edits: Dict[Tuple[int, int], str] = {}
+
+    def kind_of(key: Tuple[str, ...]) -> Optional[str]:
+        if key in kinds:
+            return kinds[key]
+        sites = _init_sites(ctx, key)
+        kind: Optional[str] = None
+        if sites and all(_is_deque_ctor(ctx, s) for s in sites):
+            kind = "deque"
+        elif sites:
+            rewrites = [_list_ctor_rewrite(ctx, source, offs, s)
+                        for s in sites]
+            if all(r is not None for r in rewrites):
+                kind = "list"
+                for s, r in zip(sites, rewrites):
+                    ctor_edits[_span(offs, s)] = r
+        kinds[key] = kind
+        return kind
+
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.lineno in flagged_lines):
+            continue
+        recv = node.func.value
+        key = _receiver_key(recv)
+        is_pop = (node.func.attr == "pop" and len(node.args) == 1
+                  and not node.keywords
+                  and isinstance(node.args[0], ast.Constant)
+                  and node.args[0].value == 0)
+        is_ins = (node.func.attr == "insert" and len(node.args) == 2
+                  and isinstance(node.args[0], ast.Constant)
+                  and node.args[0].value == 0)
+        if key is None or not (is_pop or is_ins):
+            continue
+        kind = kind_of(key)
+        if kind is None:
+            continue
+        recv_src = _src(source, offs, recv)
+        s, e = _span(offs, node)
+        if is_pop:
+            yield s, e, f"{recv_src}.popleft()"
+        else:
+            arg = _src(source, offs, node.args[1])
+            yield s, e, f"{recv_src}.appendleft({arg})"
+        if kind == "list":
+            flags["need_deque_import"] = True
+
+    yield from ((s, e, text) for (s, e), text in ctor_edits.items())
+
+
+def _import_insertion(ctx: Context, offs: List[int]) -> Tuple[int, str]:
+    """(offset, text) inserting `from collections import deque` after
+    the last top-level import (or the module docstring)."""
+    line = 0
+    for node in ctx.tree.body:
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            line = node.end_lineno or node.lineno
+        elif line == 0 and isinstance(node, ast.Expr) and isinstance(
+                node.value, ast.Constant) and isinstance(
+                node.value.value, str):
+            line = node.end_lineno or node.lineno   # docstring
+    at = offs[line] if line < len(offs) else offs[-1]
+    return at, "from collections import deque\n"
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def fix_source(source: str, path: str = "<string>") -> Tuple[str, int]:
+    """Apply every decidable fix; returns (new_source, num_fixes).
+
+    Raises SyntaxError on unparsable input (the caller reports it like
+    any other lint parse error).  num_fixes counts rewritten call/ctor
+    sites, not the import insertion."""
+    tree = ast.parse(source, filename=path)
+    ctx = Context(path, source, tree)
+    pragmas = parse_pragmas(source)
+    offs = _line_offsets(source)
+    flags = {"need_deque_import": False}
+
+    edits = list(_wall_clock_edits(ctx, pragmas, source, offs))
+    edits.extend(_queue_edits(ctx, pragmas, source, offs, flags))
+    if not edits:
+        return source, 0
+
+    # overlapping edits cannot both apply; keep the earliest-starting
+    # (stable) and drop the rest — the next --fix run converges
+    edits.sort(key=lambda t: (t[0], t[1]))
+    kept: List[Tuple[int, int, str]] = []
+    last_end = -1
+    for s, e, text in edits:
+        if s >= last_end:
+            kept.append((s, e, text))
+            last_end = e
+    n = len(kept)
+
+    if (flags["need_deque_import"]
+            and ctx.imports.names.get("deque") != "collections.deque"):
+        at, text = _import_insertion(ctx, offs)
+        kept.append((at, at, text))
+
+    out = source
+    for s, e, text in sorted(kept, key=lambda t: t[0], reverse=True):
+        out = out[:s] + text + out[e:]
+    return out, n
+
+
+def fix_paths(paths) -> Tuple[int, int, List[str]]:
+    """Fix files in place; returns (files_changed, fixes, errors)."""
+    from repro.analysis.core import iter_python_files
+    changed, total, errors = 0, 0, []
+    for p in iter_python_files(paths):
+        try:
+            with open(p, "r", encoding="utf-8") as fh:
+                src = fh.read()
+            new, n = fix_source(src, p)
+        except SyntaxError as e:
+            errors.append(f"{p}:{e.lineno or 0}: parse error: {e.msg}")
+            continue
+        except (OSError, UnicodeDecodeError) as e:
+            errors.append(f"{p}: unreadable: {e}")
+            continue
+        if n and new != src:
+            with open(p, "w", encoding="utf-8") as fh:
+                fh.write(new)
+            changed += 1
+            total += n
+    return changed, total, errors

@@ -292,3 +292,64 @@ def make_decode_rows_paged_token_step(model, mesh, max_batch, pool_shapes):
         out_shardings=(repl, c_sh, repl),
         donate_argnums=(2,))
     return fn, (p_sh, c_sh)
+
+
+# ---------------------------------------------------------------------------
+# unified mixed prefill+decode steps
+#
+# One launch fuses the decode step over live rows with one admission
+# prefill unit (whole bucketed prompt on the arena, one chunk on the
+# pool).  The decode subgraph is the same traced math as the standalone
+# token step — including the `_row_tokens_sharding` constraint, so
+# GSPMD partitions the fused step's reductions identically and
+# near-tied argmaxes cannot flip between mixed and plain steps.  The
+# prefill operands are batch-1 / scalar host values and replicate.
+# RE-BASELINE RULE: any change to these builders' sharding boundaries
+# (or to the `mixed_step_*` model entry points they wrap) must re-run
+# `launch/serve_mesh.py` serialized vs overlapped on 2 processes and
+# confirm digests still agree bitwise before landing (see
+# docs/dist.md).
+# ---------------------------------------------------------------------------
+
+
+def make_mixed_arena_token_step(model, mesh, max_batch, arena_shapes):
+    """Jitted arena mixed step: decode all rows + prefill one request.
+
+    Signature: step(params, tokens [B], caches, positions [B],
+    p_tokens [1, Sp], p_len, p_slot) ->
+    (toks [B], caches, pos + 1, p_tok [])."""
+    p_sh = serve_param_shardings(mesh, _param_shapes(model))
+    c_sh = cache_shardings(mesh, arena_shapes)
+    repl = NamedSharding(mesh, P())
+    t_in = _row_tokens_sharding(mesh, max_batch)
+    fn = jax.jit(
+        lambda params, tokens, caches, positions, p_tokens, p_len, p_slot:
+            model.mixed_step_tokens(
+                params, jax.lax.with_sharding_constraint(tokens, t_in),
+                caches, positions, p_tokens, p_len, p_slot),
+        in_shardings=(p_sh, repl, c_sh, repl, repl, repl, repl),
+        out_shardings=(repl, c_sh, repl, repl),
+        donate_argnums=(2,))
+    return fn, (p_sh, c_sh)
+
+
+def make_mixed_paged_token_step(model, mesh, max_batch, pool_shapes):
+    """Jitted paged mixed step: decode all rows + stream one chunk.
+
+    Signature: step(params, tokens [B], pool, tables [B, W],
+    lengths [B], c_tokens [1, C], c_len, ctx_len, c_table [W]) ->
+    (toks [B], pool, len + 1, c_tok [])."""
+    p_sh = serve_param_shardings(mesh, _param_shapes(model))
+    c_sh = pool_shardings(mesh, pool_shapes)
+    repl = NamedSharding(mesh, P())
+    t_in = _row_tokens_sharding(mesh, max_batch)
+    fn = jax.jit(
+        lambda params, tokens, pool, tables, lengths, c_tokens, c_len,
+               ctx_len, c_table:
+            model.mixed_step_paged_tokens(
+                params, jax.lax.with_sharding_constraint(tokens, t_in),
+                pool, tables, lengths, c_tokens, c_len, ctx_len, c_table),
+        in_shardings=(p_sh, repl, c_sh, repl, repl, repl, repl, repl, repl),
+        out_shardings=(repl, c_sh, repl, repl),
+        donate_argnums=(2,))
+    return fn, (p_sh, c_sh)

@@ -2,7 +2,8 @@
 
     PYTHONPATH=src python -m repro.launch.serve_mesh \
         --processes 2 --local-devices 2 --model-parallel 2 \
-        --requests 8 --max-batch 4 [--paged] [--out stats.json]
+        --requests 8 --max-batch 4 [--paged] [--no-overlap] \
+        [--arrival-rate R] [--num-blocks N] [--out stats.json]
 
 Run with no `--process-id`, the script is the *parent*: it picks a free
 coordinator port, spawns `--processes` copies of itself (one jax
@@ -26,8 +27,13 @@ reads its local copy, and the per-step device→host transfer is B * 4
 bytes regardless of vocab size or process count (`docs/dist.md`).
 
 The child reports `Engine.stats` (admission host time vs prefill wait
-vs decode step time, upload/fetch accounting, preemptions); process 0
-writes them to `--out` for `benchmarks/bench_mesh_serving.py`.
+vs decode step time, dispatch/fetch split, mixed-step and
+overlapped-admission counters, preemptions); process 0 writes them to
+`--out` for `benchmarks/bench_mesh_serving.py`.  `--arrival-rate R`
+submits the workload on a seeded step-indexed Poisson schedule instead
+of all up front — the load pattern where overlapped admission
+(`--no-overlap` to disable) earns its keep, since prefills then land
+while decode batches are busy rather than in one initial burst.
 
 CPU multi-process collectives use jax's gloo backend
 (`jax_cpu_collectives_implementation`); on TPU/GPU pods
@@ -61,8 +67,19 @@ def _build_parser():
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--mixed", action="store_true",
                     help="interleave short (new_tokens//4) and long budgets")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="mean Poisson arrivals per engine step (seeded, "
+                         "step-indexed — identical schedule on every "
+                         "process and across overlap modes); 0 submits "
+                         "the whole workload up front")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="serialized admission (overlap=False): block on "
+                         "each prefill's first token before decoding")
     ap.add_argument("--paged", action="store_true")
     ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="paged pool size (default: engine sizes the pool "
+                         "to max_batch worst-case rows)")
     ap.add_argument("--preemption", choices=("recompute", "reserve"),
                     default="recompute")
     ap.add_argument("--out", default=None,
@@ -89,6 +106,22 @@ def _workload(cfg, args):
     return [(rng.integers(0, cfg.vocab_size, (args.prompt_len,)),
              short if (args.mixed and i % 2 == 0) else args.new_tokens)
             for i in range(args.requests)]
+
+
+def _arrival_steps(n, rate):
+    """Engine-step index at which request i is submitted.
+
+    Poisson arrivals, but *step-indexed* rather than wall-clock: gaps
+    are drawn once from a fixed seed and floored onto step numbers, so
+    every process — and, crucially, the serialized and overlapped runs
+    being compared — replays the identical arrival schedule and their
+    output digests stay bitwise comparable."""
+    import numpy as np
+    if rate <= 0:
+        return [0] * n
+    rng = np.random.default_rng(1234)
+    gaps = rng.exponential(1.0 / rate, size=n)
+    return np.floor(np.cumsum(gaps)).astype(int).tolist()
 
 
 def _digest(done):
@@ -137,20 +170,37 @@ def run_child(args) -> int:
     max_len = bucket_length(args.prompt_len + args.new_tokens)
     eng = Engine(model, params, max_batch=args.max_batch, max_len=max_len,
                  mesh=mesh, paged=args.paged, block_size=args.block_size,
-                 preemption=args.preemption)
+                 num_blocks=args.num_blocks, preemption=args.preemption,
+                 overlap=not args.no_overlap)
     backend = "paged" if eng.paged else "arena"
 
-    # warm up compiles through the same engine (same prompt bucket; the
-    # workload's longest budget reaches every pow2 table-width bucket
-    # the timed runs can), then measure the workload as a stats delta
-    eng.submit(reqs[0][0], max_new_tokens=max(b for _, b in reqs))
-    eng.run()
+    def _run_workload():
+        """Submit `reqs` on the arrival schedule and drain; returns
+        {uid: Request} for this pass only."""
+        uids, done, nxt, step_i = [], {}, 0, 0
+        while nxt < len(reqs) or eng.num_active or eng.pending:
+            while nxt < len(reqs) and arrive[nxt] <= step_i:
+                p, b = reqs[nxt]
+                uids.append(eng.submit(p, max_new_tokens=b))
+                nxt += 1
+            for r in eng.step():
+                done[r.uid] = r
+            step_i += 1
+        return {u: r for u, r in done.items() if u in set(uids)}
+
+    # warm up by replaying the EXACT timed loop once: the engine is
+    # deterministic, so the same arrival schedule reproduces the same
+    # launch sequence and the timed pass hits only cached executables.
+    # An all-up-front warm-up would miss the overlap scheduler's mixed
+    # prefill+decode variants (an idle engine admits through the plain
+    # cold-start path, never a mixed step).
+    arrive = _arrival_steps(len(reqs), args.arrival_rate)
+    _run_workload()
     eng._done.clear()
     warm = eng.stats
 
     t0 = time.perf_counter()
-    uids = [eng.submit(p, max_new_tokens=b) for p, b in reqs]
-    done = {r.uid: r for r in eng.run() if r.uid in set(uids)}
+    done = _run_workload()
     wall_s = time.perf_counter() - t0
     stats = eng.stats
     delta = {k: (stats[k] - warm[k]
@@ -178,13 +228,17 @@ def run_child(args) -> int:
         "h2d_uploads_per_decode_step": delta["h2d_uploads"] / dsteps,
         "throughput_tok_s": toks / max(wall_s, 1e-12),
     }
-    print(f"[proc {pid}] {backend}: {len(done)}/{len(uids)} requests, "
+    print(f"[proc {pid}] {backend}"
+          f"[{'overlap' if eng.overlap else 'serialized'}]: "
+          f"{len(done)}/{len(reqs)} requests, "
           f"{toks} tokens in {wall_s:.2f}s; "
           f"admission {derived['admission_ms_per_admission']:.2f} ms/req "
           f"(host {derived['admit_host_ms_per_admission']:.2f} + wait "
           f"{derived['prefill_wait_ms_per_admission']:.2f}), decode step "
           f"{derived['decode_step_ms']:.2f} ms, fetch "
-          f"[{delta['decode_fetch_elems']}] {delta['decode_fetch_dtype']}",
+          f"[{delta['decode_fetch_elems']}] {delta['decode_fetch_dtype']}, "
+          f"mixed_steps {delta['mixed_steps']}, "
+          f"overlapped_admissions {delta['overlapped_admissions']}",
           flush=True)
 
     if args.out and pid == 0:
@@ -199,6 +253,8 @@ def run_child(args) -> int:
                          "new_tokens": args.new_tokens,
                          "mixed": bool(args.mixed),
                          "max_batch": args.max_batch,
+                         "arrival_rate": args.arrival_rate,
+                         "overlap": bool(eng.overlap),
                          "preemption": args.preemption
                          if backend == "paged" else None},
             "completed": len(done),

@@ -264,6 +264,27 @@ def gqa_decode(params, cfg, x, cache, position, window=0):
 # The slot arena is the degenerate case of one contiguous block per slot:
 # GQA and MLA decode/prefill math below is identical to the arena path, so
 # the two modes are bit-compatible (tests assert token-level identity).
+#
+# Overwrite-before-valid: every KV position is written (scatter_chunk_pages
+# during prefill, scatter_token_pages as decode crosses it) strictly before
+# the validity length covers it, and positions at or above the validity
+# length contribute exp(-1e30 - max) == 0.0 exactly to the softmax — so any
+# stale content below a future write is bitwise inert, and so is the table
+# width itself (a wider slice only adds masked null-block lanes).  The
+# overlapped admission scheduler (repro.serve.engine) leans on this twice:
+#   * a dead slot's zeroed device table row routes the fused decode's
+#     writes to the null block while the slot's real prompt blocks fill
+#     through a private table riding the same launch generation;
+#   * preempting a mid-admission slot frees blocks that in-flight prefill
+#     launches still write to — whatever re-allocates them rewrites every
+#     entry before any position becomes valid, so the stale writes never
+#     surface.
+# The ARENA decode does not share this property: ring_insert advances a
+# cache-carried per-(layer, slot) ptr and writes at it, so a dead arena
+# slot is only inert until something stores real content in its row.  The
+# engine therefore admits arena requests through the mixed step only,
+# whose trace runs decode (dead-row garbage write) before the prefill's
+# _write_slot fully overwrites the row and resets the ptr.
 # ---------------------------------------------------------------------------
 
 
@@ -575,6 +596,329 @@ def mla_decode_paged(params, cfg, x, cache, tables, lengths):
     out = jnp.einsum("bhr,rhd->bhd", ctx, wv_b.astype(jnp.float32))
     out = out.reshape(b, 1, h * m.v_head_dim).astype(x.dtype)
     return out @ params["wo"], {"ckv": cc, "kpe": cp}
+
+
+# ---------------------------------------------------------------------------
+# fused mixed prefill+decode attention (one projection, two cores)
+#
+# The unified mixed step's layer body: the incoming hidden states are ONE
+# token batch [1, nd + S, D] — nd decode tokens (one per slot, in slot
+# order) followed by the admission prompt's S tokens — so the q/k/v
+# projections, the output projection, and (in the caller) the MLP and
+# unembed run ONCE over all tokens.  Those dense matmuls carry the
+# model-parallel collectives; running decode-then-prefill as two
+# subgraphs in one jit (the obvious composition) pays them twice and
+# makes the "fused" launch cost exactly the sum of its parts.  Only the
+# attention cores — a few collective-free per-head contractions — split
+# the token batch.
+#
+# Bit-identity discipline: every per-token op (matmul rows, rope, norms)
+# is row-stable across batch shapes on our backends, the decode core
+# below is copied from gqa_decode/mla_decode(+_paged) verbatim after the
+# projection split, and the prefill core from gqa_prefill/mla_prefill
+# (+_paged) likewise — so each side produces bitwise the values the
+# standalone launches would, and the serialized-vs-overlapped digest
+# gates in tests/benchmarks hold exactly.  Cache writes keep the
+# sequential trace's order: decode inserts first (the dead arena slot's
+# garbage ring write, the paged null-block routing), then the prefill
+# entries land — arena rows are fully overwritten, pool write sets are
+# disjoint.
+# ---------------------------------------------------------------------------
+
+
+def _rope_mixed(t, nd, pos_d, pos_p, theta):
+    """apply_rope over the concat token axis, one half at a time.
+
+    pos_d [1, nd] / pos_p [1, S] are the halves' own position vectors,
+    never concatenated: roping with a position vector built by an
+    in-jit concat miscompiles under GSPMD on data x model meshes (the
+    same pathology as gathering with a concatenated token-id vector;
+    see transformer._mixed_embed).  Rope is elementwise and
+    row-stable, so the per-half results are bitwise the concat-rope
+    values."""
+    return jnp.concatenate([apply_rope(t[:, :nd], pos_d, theta),
+                            apply_rope(t[:, nd:], pos_p, theta)], axis=1)
+
+
+def _project_qkv_mixed(params, cfg, x, nd, pos_d, pos_p):
+    """`_project_qkv` for the fused mixed batch: ONE set of q/k/v
+    matmuls over [1, nd+S, D] (that is the collective win), rope
+    applied per half via `_rope_mixed`."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // kv
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    q = _rope_mixed(q, nd, pos_d, pos_p, cfg.rope_theta)
+    k = _rope_mixed(k, nd, pos_d, pos_p, cfg.rope_theta)
+    q = q.reshape(b, s, kv, g, hd)
+    return q, k, v
+
+
+def _mla_q_mixed(params, cfg, x, nd, pos_d, pos_p):
+    """`_mla_q` for the fused mixed batch (per-half rope)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = rmsnorm(params["q_norm"], x @ params["wq_a"]) @ params["wq_b"]
+    q = q.reshape(b, s, h, qk)
+    q_nope, q_pe = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_pe = _rope_mixed(q_pe, nd, pos_d, pos_p, cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def _mla_ckv_mixed(params, cfg, x, nd, pos_d, pos_p):
+    """`_mla_ckv` for the fused mixed batch (per-half rope)."""
+    m = cfg.mla
+    kv = x @ params["wkv_a"]
+    c_kv, k_pe = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(params["kv_norm"], c_kv)
+    k_pe = _rope_mixed(k_pe[:, :, None, :], nd, pos_d, pos_p,
+                       cfg.rope_theta)[:, :, 0]
+    return c_kv, k_pe
+
+
+def gqa_mixed(params, cfg, x, nd, pos_d, pos_p, cache, p_len, p_slot,
+              window=0):
+    """Fused arena layer: decode rows [:nd] + whole-prompt prefill [nd:].
+
+    x: [1, nd+S, D] (already normed); pos_d [1, nd] / pos_p [1, S]:
+    the decode rows' absolute depths and 0..S-1.  cache: one arena layer
+    {k, v: [nd, T, KV, hd], ptr [nd]}.  The prefilled slot `p_slot` must
+    be dead to decode; its row is fully overwritten (prompt entries +
+    ptr = p_len) after the decode-side ring insert, exactly like
+    `decode_rows` followed by `prefill_into_slot`.
+
+    Returns ([1, nd+S, D], new cache)."""
+    _, s_tot, _ = x.shape
+    sp = s_tot - nd
+    h, hd = cfg.num_heads, cfg.head_dim
+    q, k, v = _project_qkv_mixed(params, cfg, x, nd, pos_d, pos_p)
+
+    # decode core (== gqa_decode after projection)
+    qd = q[0, :nd]                                # [nd,KV,G,hd]
+    t = cache["k"].shape[1]
+    ck = ring_insert(cache["k"], k[0, :nd], cache["ptr"])
+    cv = ring_insert(cache["v"], v[0, :nd], cache["ptr"])
+    num_valid = jnp.minimum(cache["ptr"] + 1, t)
+    logits = jnp.einsum("bkgh,btkh->bkgt", qd.astype(jnp.float32),
+                        ck.astype(jnp.float32)) * float(1.0 / np.sqrt(hd))
+    valid = jnp.arange(t) < jnp.reshape(num_valid, (-1, 1))
+    logits = jnp.where(valid[:, None, None, :], logits, _NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out_d = jnp.einsum("bkgt,btkh->bkgh", p, cv.astype(jnp.float32))
+    out_d = out_d.reshape(1, nd, h * hd).astype(x.dtype)
+
+    # prefill core (== gqa_prefill after projection)
+    win = window if window else cfg.attn_window
+    out_p = chunked_attention(q[:, nd:], k[:, nd:], v[:, nd:],
+                              causal=True, window=win)
+    out_p = out_p.reshape(1, sp, h * hd)
+
+    # splice the prompt's cache row over the decode-side insert
+    row_k = prefill_cache_entries(k[:, nd:], t, sp).astype(ck.dtype)
+    row_v = prefill_cache_entries(v[:, nd:], t, sp).astype(cv.dtype)
+    new_cache = {
+        "k": jax.lax.dynamic_update_slice_in_dim(ck, row_k, p_slot, axis=0),
+        "v": jax.lax.dynamic_update_slice_in_dim(cv, row_v, p_slot, axis=0),
+        "ptr": (cache["ptr"] + 1).at[p_slot].set(
+            jnp.asarray(p_len, cache["ptr"].dtype)),
+    }
+    out = jnp.concatenate([out_d, out_p], axis=1)
+    return out @ params["wo"], new_cache
+
+
+def gqa_mixed_paged(params, cfg, x, nd, pos_d, pos_p, cache, tables, lengths,
+                    ctx_len, c_table):
+    """Fused paged layer: decode rows [:nd] + one prefill chunk [nd:].
+
+    cache: one pool layer {k, v: [NB, bs, KV, hd]}.  Decode scatters
+    first (dead rows route to the null block), the chunk then gathers
+    its context from the updated pool and scatters its own entries —
+    the same op order as `decode_rows_paged` followed by
+    `prefill_chunk_into_blocks`, whose write sets are disjoint.
+
+    Returns ([1, nd+C, D], new cache)."""
+    _, s_tot, _ = x.shape
+    c = s_tot - nd
+    h, hd = cfg.num_heads, cfg.head_dim
+    scale = float(1.0 / np.sqrt(hd))
+    q, k, v = _project_qkv_mixed(params, cfg, x, nd, pos_d, pos_p)
+
+    # decode core (== gqa_decode_paged after projection)
+    qd = q[0, :nd]
+    ck = scatter_token_pages(cache["k"], k[0, :nd], tables, lengths)
+    cv = scatter_token_pages(cache["v"], v[0, :nd], tables, lengths)
+    kf = gather_pages(ck, tables)
+    vf = gather_pages(cv, tables)
+    t = kf.shape[1]
+    logits = jnp.einsum("bkgh,btkh->bkgt", qd.astype(jnp.float32),
+                        kf.astype(jnp.float32)) * scale
+    valid = jnp.arange(t) < jnp.reshape(lengths + 1, (-1, 1))
+    logits = jnp.where(valid[:, None, None, :], logits, _NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out_d = jnp.einsum("bkgt,btkh->bkgh", p, vf.astype(jnp.float32))
+    out_d = out_d.reshape(1, nd, h * hd).astype(x.dtype)
+
+    # chunk core (== gqa_prefill_paged after projection, on the
+    # decode-updated pool)
+    k_new, v_new = k[:, nd:], v[:, nd:]
+    k_ctx = gather_pages(ck, c_table[None])
+    v_ctx = gather_pages(cv, c_table[None])
+    out_p = _paged_context_attention(q[:, nd:], k_ctx, v_ctx, k_new, v_new,
+                                     ctx_len, scale)
+    out_p = out_p.reshape(1, c, h * hd).astype(x.dtype)
+
+    new_cache = {
+        "k": scatter_chunk_pages(ck, k_new[0], c_table, ctx_len),
+        "v": scatter_chunk_pages(cv, v_new[0], c_table, ctx_len),
+    }
+    out = jnp.concatenate([out_d, out_p], axis=1)
+    return out @ params["wo"], new_cache
+
+
+def mla_mixed(params, cfg, x, nd, pos_d, pos_p, cache, p_len, p_slot):
+    """Fused arena MLA layer: absorbed decode [:nd] + prefill [nd:].
+
+    cache: one arena layer {ckv [nd,T,r], kpe [nd,T,rope], ptr [nd]}.
+    Same contract as `gqa_mixed`."""
+    m = cfg.mla
+    _, s_tot, _ = x.shape
+    sp = s_tot - nd
+    h = cfg.num_heads
+    q_nope, q_pe = _mla_q_mixed(params, cfg, x, nd, pos_d, pos_p)
+    c_kv, k_pe = _mla_ckv_mixed(params, cfg, x, nd, pos_d, pos_p)
+
+    # decode core (== mla_decode after projection; x-axis is size 1)
+    t = cache["ckv"].shape[1]
+    ckv = ring_insert(cache["ckv"], c_kv[0, :nd], cache["ptr"])
+    kpe = ring_insert(cache["kpe"], k_pe[0, :nd], cache["ptr"])
+    num_valid = jnp.minimum(cache["ptr"] + 1, t)
+    wk_b = params["wk_b"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    qd_nope = q_nope[0, :nd][:, None]                    # [nd,1,H,dn]
+    qd_pe = q_pe[0, :nd][:, None]
+    q_lat = jnp.einsum("bxhd,rhd->bhr", qd_nope.astype(jnp.float32),
+                       wk_b.astype(jnp.float32))
+    scale = float(1.0 / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim))
+    logits = (jnp.einsum("bhr,btr->bht", q_lat, ckv.astype(jnp.float32))
+              + jnp.einsum("bxhd,btd->bht", qd_pe.astype(jnp.float32),
+                           kpe.astype(jnp.float32))) * scale
+    valid = jnp.arange(t) < jnp.reshape(num_valid, (-1, 1))
+    logits = jnp.where(valid[:, None, :], logits, _NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bht,btr->bhr", p, ckv.astype(jnp.float32))
+    wv_b = params["wv_b"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out_d = jnp.einsum("bhr,rhd->bhd", ctx, wv_b.astype(jnp.float32))
+    out_d = out_d.reshape(1, nd, h * m.v_head_dim).astype(x.dtype)
+
+    # prefill core (== mla_prefill after projection: non-absorbed)
+    cp, pp = c_kv[:, nd:], k_pe[:, nd:]
+    k_nope = (cp @ params["wk_b"]).reshape(1, sp, h, m.qk_nope_head_dim)
+    vp = (cp @ params["wv_b"]).reshape(1, sp, h, m.v_head_dim)
+    qp = jnp.concatenate([q_nope[:, nd:], q_pe[:, nd:]], axis=-1)
+    kp = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(pp[:, :, None, :],
+                                  (1, sp, h, m.qk_rope_head_dim))], axis=-1)
+    out_p = chunked_attention(qp[:, :, :, None, :].reshape(
+        1, sp, h, 1, qp.shape[-1]), kp, vp, causal=True)
+    out_p = out_p.reshape(1, sp, h * m.v_head_dim)
+
+    row_c = prefill_cache_entries(cp, t, sp).astype(ckv.dtype)
+    row_p = prefill_cache_entries(pp, t, sp).astype(kpe.dtype)
+    new_cache = {
+        "ckv": jax.lax.dynamic_update_slice_in_dim(ckv, row_c, p_slot,
+                                                   axis=0),
+        "kpe": jax.lax.dynamic_update_slice_in_dim(kpe, row_p, p_slot,
+                                                   axis=0),
+        "ptr": (cache["ptr"] + 1).at[p_slot].set(
+            jnp.asarray(p_len, cache["ptr"].dtype)),
+    }
+    out = jnp.concatenate([out_d, out_p], axis=1)
+    return out @ params["wo"], new_cache
+
+
+def mla_mixed_paged(params, cfg, x, nd, pos_d, pos_p, cache, tables, lengths,
+                    ctx_len, c_table):
+    """Fused paged MLA layer: absorbed decode [:nd] + one chunk [nd:].
+
+    cache: one latent pool layer {ckv [NB,bs,r], kpe [NB,bs,rope]}.
+    Same contract and op order as `gqa_mixed_paged`."""
+    m = cfg.mla
+    _, s_tot, _ = x.shape
+    c = s_tot - nd
+    h = cfg.num_heads
+    q_nope, q_pe = _mla_q_mixed(params, cfg, x, nd, pos_d, pos_p)
+    c_kv, k_pe = _mla_ckv_mixed(params, cfg, x, nd, pos_d, pos_p)
+
+    # decode core (== mla_decode_paged after projection)
+    cc = scatter_token_pages(cache["ckv"], c_kv[0, :nd], tables, lengths)
+    cp_pool = scatter_token_pages(cache["kpe"], k_pe[0, :nd], tables,
+                                  lengths)
+    ckv = gather_pages(cc, tables)
+    kpe = gather_pages(cp_pool, tables)
+    t = ckv.shape[1]
+    wk_b = params["wk_b"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    qd_nope = q_nope[0, :nd][:, None]
+    qd_pe = q_pe[0, :nd][:, None]
+    q_lat = jnp.einsum("bxhd,rhd->bhr", qd_nope.astype(jnp.float32),
+                       wk_b.astype(jnp.float32))
+    scale = float(1.0 / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim))
+    logits = (jnp.einsum("bhr,btr->bht", q_lat, ckv.astype(jnp.float32))
+              + jnp.einsum("bxhd,btd->bht", qd_pe.astype(jnp.float32),
+                           kpe.astype(jnp.float32))) * scale
+    valid = jnp.arange(t) < jnp.reshape(lengths + 1, (-1, 1))
+    logits = jnp.where(valid[:, None, :], logits, _NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bht,btr->bhr", p, ckv.astype(jnp.float32))
+    wv_b = params["wv_b"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out_d = jnp.einsum("bhr,rhd->bhd", ctx, wv_b.astype(jnp.float32))
+    out_d = out_d.reshape(1, nd, h * m.v_head_dim).astype(x.dtype)
+
+    # chunk core (== mla_prefill_paged after projection, on the
+    # decode-updated pool)
+    new_ckv, new_kpe = c_kv[:, nd:], k_pe[:, nd:]
+    ckv_ctx = gather_pages(cc, c_table[None])
+    kpe_ctx = gather_pages(cp_pool, c_table[None])
+    tc = ckv_ctx.shape[1]
+
+    def expand(ckv_in, kpe_in, s):
+        ckv_in = ckv_in.astype(x.dtype)
+        k_nope = (ckv_in @ params["wk_b"]).reshape(1, s, h,
+                                                   m.qk_nope_head_dim)
+        vv = (ckv_in @ params["wv_b"]).reshape(1, s, h, m.v_head_dim)
+        kk = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(
+                kpe_in[:, :, None, :].astype(k_nope.dtype),
+                (1, s, h, m.qk_rope_head_dim))], -1)
+        return kk, vv
+
+    k_ctx, v_ctx = expand(ckv_ctx, kpe_ctx, tc)
+    k_new, v_new = expand(new_ckv, new_kpe, c)
+    qp = jnp.concatenate([q_nope[:, nd:], q_pe[:, nd:]], axis=-1)
+    qk = qp.shape[-1]
+    out_p = _paged_context_attention(
+        qp.reshape(1, c, h, 1, qk), k_ctx, v_ctx, k_new, v_new, ctx_len,
+        float(1.0 / np.sqrt(qk)))
+    out_p = out_p.reshape(1, c, h * m.v_head_dim).astype(x.dtype)
+
+    new_cache = {
+        "ckv": scatter_chunk_pages(cc, new_ckv[0], c_table, ctx_len),
+        "kpe": scatter_chunk_pages(cp_pool, new_kpe[0], c_table, ctx_len),
+    }
+    out = jnp.concatenate([out_d, out_p], axis=1)
+    return out @ params["wo"], new_cache
 
 
 # ---------------------------------------------------------------------------

@@ -49,6 +49,13 @@ class Model:
     decode_rows_tokens: Callable = None         # -> (toks [B], arena, pos+1)
     prefill_chunk_into_blocks_token: Callable = None  # -> (tok [], pool)
     decode_rows_paged_tokens: Callable = None   # -> (toks [B], pool, len+1)
+    # unified mixed prefill+decode steps (one launch = decode all live
+    # rows + one admission prefill unit); None for families whose decode
+    # state is not row-independent under a dead-slot overwrite.
+    mixed_step_tokens: Callable = None          # -> (toks [B], arena,
+                                                #     pos+1, p_tok [])
+    mixed_step_paged_tokens: Callable = None    # -> (toks [B], pool,
+                                                #     len+1, c_tok [])
 
 
 def build_model(cfg: ArchConfig, window: int = 0) -> Model:
@@ -95,6 +102,12 @@ def build_model(cfg: ArchConfig, window: int = 0) -> Model:
                                                      ctx, table, pool),
         decode_rows_paged_tokens=lambda p, t, pool, tables, lengths:
             TF.decode_rows_paged_tokens(cfg, p, t, pool, tables, lengths),
+        mixed_step_tokens=lambda p, t, c, pos, pt, pl, ps:
+            TF.mixed_step_tokens(cfg, p, t, c, pos, pt, pl, ps,
+                                 window=window),
+        mixed_step_paged_tokens=lambda p, t, pool, tables, lengths, ct, cl,
+            ctx, ctab: TF.mixed_step_paged_tokens(cfg, p, t, pool, tables,
+                                                  lengths, ct, cl, ctx, ctab),
     )
 
 

@@ -532,6 +532,172 @@ def decode_rows_paged_tokens(cfg, params, tokens, pool, block_tables,
 
 
 # ---------------------------------------------------------------------------
+# unified mixed prefill+decode steps (Sarathi/vLLM mixed batch)
+#
+# One launch = one decode step over all live rows PLUS one admission
+# prefill unit (a whole bucketed prompt on the arena, one fixed-size
+# chunk on the paged pool).  Admission then rides the decode launch the
+# live rows were going to pay for anyway, instead of serializing an
+# extra prefill launch in front of it.
+#
+# The fusion is a *token concatenation*, not a subgraph composition:
+# the B decode tokens and the S prompt/chunk tokens run as ONE token
+# batch [1, B+S, D] through every dense op — embed, norms, qkv/latent
+# projections, the output projection, the MLP, the unembed — and split
+# only inside the attention core (repro.models.attention gqa_mixed /
+# mla_mixed and their _paged variants).  The dense matmuls are where
+# the model-parallel collectives live, so an admission step pays ONE
+# set of per-layer collectives instead of decode's plus prefill's; a
+# decode+prefill composition in a single jit would conserve the
+# collective count and make the mixed step cost exactly the sum of its
+# parts (measured: no overlap win at all on collective-bound meshes).
+#
+# Bit-identity argument (the house discipline): per-token ops (matmul
+# rows, rope, rmsnorm, embedding gathers) are row-stable across batch
+# shapes, and the attention cores are copied from the standalone
+# decode/prefill functions verbatim after the projection split — so
+# both halves produce bitwise the values the serialized launches
+# would.  The two halves also touch disjoint state: the slot being
+# prefilled is DEAD to the decode side — the engine keeps its
+# decode-visible length/table at zero until the prefill completes.
+# Order inside the cores is decode-then-prefill: on the arena the
+# decode's dead-row garbage insert (ring ptr of the previous occupant)
+# must land BEFORE the prefill row splice overwrites the whole row; on
+# the pool the two write sets are disjoint (the dead row's decode
+# writes route to the null block), so either order works and we keep
+# one convention.
+#
+# Only all-attention stacks reach this path (FamilyCaps.pad_prompts
+# gates supports_mixed_step), so the scan below assumes one
+# homogeneous "attn" segment.
+# ---------------------------------------------------------------------------
+
+
+def _mixed_forward(cfg, params, x, caches, attn_fn):
+    """Shared trunk of the fused mixed steps.
+
+    Scans the (single, homogeneous) attention segment over x
+    [1, B+S, D] with `attn_fn(p_attn, h_normed, cache_layer) ->
+    (attn_out, new_cache_layer)` as the attention, then applies the
+    final norm.  Returns (x, new_caches) with the per-segment list
+    structure `forward` uses."""
+    segs = build_segments(cfg.layer_types)
+    assert segs == [("attn", len(cfg.layer_types))], (
+        f"mixed step needs a pure attention stack, got {segs}")
+    _, norm = make_norm(cfg.norm_type)
+
+    def body(xx, inp):
+        p_layer, c_layer = inp
+        h = norm(p_layer["ln1"], xx)
+        attn_out, new_c = attn_fn(p_layer["attn"], h, c_layer)
+        xx = xx + attn_out
+        h2 = norm(p_layer["ln2"], xx)
+        xx = xx + mlp_apply(p_layer["mlp"], h2, cfg.mlp_type)
+        return xx, new_c
+
+    x, new_seg = jax.lax.scan(body, x, (params["segments"][0], caches[0]))
+    return norm(params["final_norm"], x), [new_seg]
+
+
+def _mixed_outputs(cfg, params, x, b, last_idx):
+    """Greedy tokens from the fused trunk's output x [1, B+S, D]:
+    (decode next-tokens [B] int32, admission token [] int32 at
+    position `last_idx` of the concat axis)."""
+    h_sel = jnp.concatenate(
+        [x[0, :b],
+         jax.lax.dynamic_slice_in_dim(x[0], last_idx, 1, axis=0)],
+        axis=0)[None]                                  # [1, B+1, D]
+    logits = logits_fn(cfg, params, h_sel).astype(jnp.float32)
+    nxt = jnp.argmax(logits[0, :b], -1).astype(jnp.int32)
+    p_tok = jnp.argmax(logits[0, b], -1).astype(jnp.int32)
+    return nxt, p_tok
+
+
+def _mixed_embed(cfg, params, dec_tokens, adm_tokens):
+    """Embed the decode rows and the admission tokens as two separate
+    gathers and concatenate the *embeddings* into the [1, B+S, D] fused
+    token batch.
+
+    A single gather of the concatenated token-id vector against the
+    vocab-sharded embedding table miscompiles under XLA SPMD on
+    data x model meshes (NaN rows in the gather output); the two
+    standalone-shaped gathers — [B, 1] as in decode_rows, [1, S] as in
+    prefill — are the exact shapes the serialized launches use and
+    compile cleanly everywhere.  Gathers are row-stable, so the concat
+    of the two results is bitwise the same token batch either way."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    xd = embed(params["embed"], dec_tokens[:, None]).astype(dt)    # [B,1,D]
+    xa = embed(params["embed"], adm_tokens).astype(dt)             # [1,S,D]
+    return jnp.concatenate([jnp.transpose(xd, (1, 0, 2)), xa], axis=1)
+
+
+def mixed_step_tokens(cfg, params, tokens, caches, positions,
+                      p_tokens, p_len, p_slot, window=0):
+    """One fused arena launch: decode all rows + prefill one request.
+
+    tokens/positions: the decode operands ([B] int32 each); the slot
+    being prefilled must be dead to decode (its position is garbage and
+    its row is fully overwritten by the prefill below).
+    p_tokens [1, Sp] / p_len / p_slot: the `prefill_into_slot` operands.
+
+    Returns (next [B] int32, caches, positions + 1, p_tok [] int32)."""
+    params = _cast(cfg, params)
+    b = tokens.shape[0]
+    sp = p_tokens.shape[1]
+    positions = jnp.asarray(positions, jnp.int32)
+    x = _mixed_embed(cfg, params, tokens, p_tokens)            # [1, B+Sp, D]
+    pos_d = positions[None]                                    # [1, B]
+    pos_p = jnp.arange(sp, dtype=jnp.int32)[None]              # [1, Sp]
+
+    if cfg.mla is not None:
+        def attn_fn(p, h, c):
+            return A.mla_mixed(p, cfg, h, b, pos_d, pos_p, c, p_len, p_slot)
+    else:
+        def attn_fn(p, h, c):
+            return A.gqa_mixed(p, cfg, h, b, pos_d, pos_p, c, p_len, p_slot,
+                               window=window)
+
+    x, caches = _mixed_forward(cfg, params, x, caches, attn_fn)
+    nxt, p_tok = _mixed_outputs(cfg, params, x, b, b + p_len - 1)
+    return nxt, caches, positions + 1, p_tok
+
+
+def mixed_step_paged_tokens(cfg, params, tokens, pool, block_tables, lengths,
+                            c_tokens, c_len, ctx_len, c_table):
+    """One fused pool launch: decode all rows + stream one prefill chunk.
+
+    tokens/block_tables/lengths: the paged decode operands; the slot
+    being streamed must carry a zeroed table row and length 0 (dead to
+    decode — its writes route to the null block).
+    c_tokens [1, C] / c_len / ctx_len / c_table [W]: the
+    `prefill_chunk_into_blocks` operands; c_table's width must match
+    block_tables' so the mixed step stays one jit family per width.
+
+    Returns (next [B] int32, pool, lengths + 1, c_tok [] int32 — only
+    meaningful when this was the prompt's final chunk)."""
+    params = _cast(cfg, params)
+    b = tokens.shape[0]
+    c = c_tokens.shape[1]
+    lengths = jnp.asarray(lengths, jnp.int32)
+    x = _mixed_embed(cfg, params, tokens, c_tokens)            # [1, B+C, D]
+    pos_d = lengths[None]                                      # [1, B]
+    pos_p = (ctx_len + jnp.arange(c, dtype=jnp.int32))[None]   # [1, C]
+
+    if cfg.mla is not None:
+        def attn_fn(p, h, cc):
+            return A.mla_mixed_paged(p, cfg, h, b, pos_d, pos_p, cc,
+                                     block_tables, lengths, ctx_len, c_table)
+    else:
+        def attn_fn(p, h, cc):
+            return A.gqa_mixed_paged(p, cfg, h, b, pos_d, pos_p, cc,
+                                     block_tables, lengths, ctx_len, c_table)
+
+    x, pool = _mixed_forward(cfg, params, x, pool, attn_fn)
+    nxt, c_tok = _mixed_outputs(cfg, params, x, b, b + c_len - 1)
+    return nxt, pool, lengths + 1, c_tok
+
+
+# ---------------------------------------------------------------------------
 # paged-KV entry points (repro.serve block-pool continuous batching)
 #
 # The arena above dedicates a full capacity-T cache row to every slot; the

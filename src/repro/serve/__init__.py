@@ -13,9 +13,15 @@ admission defaults to vLLM-style preempt-and-recompute
 (`preemption="recompute"`: optimistic admission against currently-free
 blocks, LIFO eviction + head re-queue under pressure, bitwise-identical
 outputs); `preemption="reserve"` keeps the pessimistic worst-case
-reservation policy.  See docs/serving.md for the full lifecycle.
+reservation policy.  With `overlap=True` (default where the family's
+`FamilyCaps.supports_mixed_step` holds) admission overlaps decode: the
+queue head's prefill rides the decode launches through a unified mixed
+prefill+decode step and first tokens resolve a step later, never
+blocking a decode dispatch.  See docs/serving.md for the full
+lifecycle.
 """
 from repro.serve.bucketing import (bucket_length, chunks_needed,  # noqa: F401
-                                   num_buckets)
-from repro.serve.engine import Engine, Request  # noqa: F401
+                                   num_buckets, table_width)
+from repro.serve.engine import (Engine, FamilyCaps, Request,  # noqa: F401
+                                probe_family_caps)
 from repro.serve.paging import BlockAllocator, blocks_needed  # noqa: F401

@@ -44,3 +44,19 @@ def chunks_needed(n: int, chunk: int) -> int:
     Same ceil division as `paging.blocks_needed`, named for the
     schedule-side question it answers."""
     return blocks_needed(n, chunk)
+
+
+def table_width(num_tokens: int, block_size: int, num_blocks: int) -> int:
+    """Pow2-bucketed block-table width covering `num_tokens` positions.
+
+    The paged decode step (and the mixed decode+chunk step) compile once
+    per distinct table width; bucketing the width keeps that at
+    O(log num_blocks) families.  The mixed step reuses this SAME width
+    for both the [B, W] decode tables and the [W] chunk table riding the
+    launch — one width to rule both operands, so fusing admission into
+    the decode launch adds zero new width families: a mixed step at
+    width W lowers exactly once, whatever mix of prompt lengths streams
+    through it.
+    """
+    return min(bucket_length(blocks_needed(num_tokens, block_size)),
+               num_blocks)

@@ -88,12 +88,44 @@ paper is about):
     the decode step returns advanced lengths and next tokens, which
     feed straight back in, so steady-state decoding performs zero
     host→device uploads (mirrors re-sync from host state only when
-    admission, finish, or preemption actually changes it).
+    admission, finish, or preemption actually changes it);
+  * with `overlap=True` (default where the family supports it),
+    **admission overlaps decode** instead of serializing in front of
+    it.  The queue head's prefill rides the decode launches the live
+    rows were paying for anyway — a **unified mixed step** (the
+    Sarathi/vLLM mixed batch: decode all rows + one prefill unit per
+    launch, `Model.mixed_step_tokens` / `mixed_step_paged_tokens`) —
+    and, on the paged backend, any further admissible requests launch
+    their prefills asynchronously in the same scheduler pass, with NO
+    first-token resolution before the decode dispatch (the arena
+    admits through the mixed step only: its decode ring-inserts at a
+    cache-carried per-slot ptr, so a dead arena slot stops being
+    write-inert the moment a staged prefill fills its row — see
+    models/attention.py).  Staged slots stay dead to
+    decode (zero validity length / zeroed table row, so the fused
+    decode's writes for them are inert) until `_resolve_staged`
+    installs them at the start of a later step, when the blocking
+    fetch is free — the prior step's token fetch already synced past
+    the producing launch.  All admissions staged while one stream is
+    in flight resolve *together* once it lands, oldest first, so no
+    request ever starts decoding before an older one and FIFO
+    completion order survives the overlap.  Overlapped output is
+    bitwise identical to the serialized scheduler: greedy decode is
+    row-independent, the prefill subgraph inside the mixed step sees
+    exactly the operands a standalone launch would, and the mixed
+    trace runs decode before prefill so the dead slot's garbage decode
+    write is fully overwritten before the slot ever becomes valid.
+    On meshes with two or more nontrivial axes the engine swaps the
+    mixed launch for **async composition** — the serialized scheduler's
+    own decode and prefill graphs dispatched back-to-back without
+    blocking — because XLA SPMD rounds the fused graph's dense ops
+    context-dependently there (see `overlap_mode` on the constructor).
 
 `Engine.stats` reports the split (admission host time vs prefill wait
-vs decode step time, upload/fetch counts, preemptions);
+vs decode dispatch vs token fetch, upload/fetch counts, mixed-step and
+overlapped-admission counters, preemptions);
 `benchmarks/bench_mesh_serving.py` records it from a real 2-process
-run.
+run, including a Poisson-arrival arm comparing the two schedulers.
 """
 from __future__ import annotations
 
@@ -107,7 +139,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve.bucketing import bucket_length, chunks_needed
+from repro.serve.bucketing import bucket_length, chunks_needed, table_width
 from repro.serve.paging import BlockAllocator, blocks_needed
 from repro.utils.hotpath import hot_loop
 
@@ -129,6 +161,83 @@ class Request:
     # keep their user-facing values throughout.
     gen_prefix: List[int] = dataclasses.field(default_factory=list)
     preemptions: int = 0
+
+
+def _min_ring(arena_shapes) -> float:
+    """Smallest ring-buffer capacity across attention cache leaves
+    ([layers, B, T, ...]); inf when the model has none."""
+    caps = []
+
+    def visit(path, leaf):
+        name = None
+        for k in reversed(path):
+            if hasattr(k, "key"):
+                name = k.key
+                break
+        if name in ("k", "v", "ckv", "kpe"):
+            caps.append(leaf.shape[2])
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, arena_shapes)
+    return min(caps) if caps else float("inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class FamilyCaps:
+    """Per-family serving capabilities, probed from the model.
+
+    Replaces the old monolithic fallback chain in Engine.__init__ with
+    piecewise flags, so recurrent / sliding-window / MoE stacks opt in
+    (or out) per capability instead of hitting one table:
+
+      pad_prompts: prompt padding to pow2 buckets is semantically inert
+        (pure-attention stack with full-capacity rings).  Recurrent
+        layers fold padding into their state, moe routing capacity
+        depends on the static sequence length, and sliding-window rings
+        would let pads evict real context — those prefill at exact
+        lengths.
+      supports_paging: the shared block-pool KV backend works (all-attn
+        stack and init_pool accepts the family — recurrent state has no
+        pages to page; window rings rely on eviction, which pages never
+        do).
+      supports_chunked_prefill: prompts can stream in through fixed
+        chunks (the paged admission path; rides the same predicate).
+      supports_mixed_step: the unified decode+prefill launch is sound —
+        requires a row-independent decode over a dead slot that the
+        fused prefill fully overwrites, which is the pad_prompts
+        predicate, plus the model exposing the mixed entry points.
+    """
+    pad_prompts: bool
+    supports_paging: bool
+    supports_chunked_prefill: bool
+    supports_mixed_step: bool
+
+
+def probe_family_caps(model, *, max_batch: int = 1, capacity: int = 256,
+                      cache_dtype=jnp.bfloat16) -> FamilyCaps:
+    """Probe what the serving engine may do with `model` (abstractly —
+    eval_shape only, no allocation).  `capacity` matters: a window
+    override baked into the model caps its rings below a large enough
+    capacity, which disables padding (and a windowed init_pool raises,
+    disabling paging)."""
+    if model.prefill_into_slot is None:
+        return FamilyCaps(False, False, False, False)
+    all_attn = all(t == "attn" for t in model.cfg.layer_types)
+    arena_shapes = jax.eval_shape(
+        lambda: model.init_arena(max_batch, capacity, dtype=cache_dtype))
+    pad_prompts = all_attn and _min_ring(arena_shapes) >= capacity
+    paging = False
+    if model.init_pool is not None and all_attn:
+        try:
+            jax.eval_shape(lambda: model.init_pool(1, 2, dtype=cache_dtype))
+            paging = True
+        except NotImplementedError:
+            pass
+    mixed = bool(pad_prompts and model.mixed_step_tokens is not None
+                 and model.mixed_step_paged_tokens is not None)
+    return FamilyCaps(pad_prompts=pad_prompts, supports_paging=paging,
+                      supports_chunked_prefill=paging,
+                      supports_mixed_step=mixed)
 
 
 # One jit wrapper per (model, entry point): engines over the same model
@@ -165,17 +274,42 @@ class Engine:
     (optimistic, preempt-and-recompute under pressure; default) or
     "reserve" (pessimistic worst-case reservation, never preempts);
     the arena never preempts either way (a slot is a full reservation).
+
+    overlap_mode picks HOW overlapped admission shares the step budget:
+    "fused" runs the unified mixed launch (decode rows + the stream's
+    prefill unit in ONE jit — dense ops shared, collectives halved);
+    "async" dispatches the SAME decode and prefill graphs the
+    serialized scheduler uses, back-to-back without blocking on
+    first-token resolution.  "auto" (default) resolves to "fused"
+    except on meshes with a nontrivial data axis, for two independent
+    reasons.  Perf: the mixed batch is token-concatenated — shape
+    [1, B+S, D], batch dim 1 — so a data axis has nothing to shard and
+    the whole mixed launch replicates onto every data shard (measured
+    2.5x slower than serialized on a data-only mesh), whereas on pure
+    model-parallel meshes the fused launch SHARES the per-layer
+    collectives between decode and prefill and admission becomes
+    nearly free.  Bitwise: on data x model meshes XLA SPMD compiles
+    the fused graph's dense ops with context-dependent ULP rounding
+    (measured on CPU) and would break the serialized-vs-overlapped
+    digest gate; "async" keeps that gate by construction — identical
+    compiled graphs, identical operands, only the host-side blocking
+    removed.
     """
 
     def __init__(self, model, params, *, max_batch: int = 8,
                  max_len: int = 256, cache_dtype=jnp.bfloat16, mesh=None,
                  paged: bool = False, block_size: int = 16,
                  num_blocks: Optional[int] = None, prefill_chunk: int = 32,
-                 preemption: str = "recompute"):
+                 preemption: str = "recompute", overlap: bool = True,
+                 overlap_mode: str = "auto"):
         if preemption not in ("recompute", "reserve"):
             raise ValueError(
                 f"preemption must be 'recompute' or 'reserve', "
                 f"got {preemption!r}")
+        if overlap_mode not in ("auto", "fused", "async"):
+            raise ValueError(
+                f"overlap_mode must be 'auto', 'fused' or 'async', "
+                f"got {overlap_mode!r}")
         self.preemption = preemption
         self.num_preemptions = 0    # total evictions (observability)
         if model.prefill_into_slot is None:
@@ -185,40 +319,34 @@ class Engine:
         self.params = params
         self.max_batch = int(max_batch)
         self.capacity = bucket_length(max_len)
-        # prompt padding is only inert for pure attention stacks: the
-        # recurrent kinds (rwkv/rglru) fold padding into their state,
-        # and moe layers drop tokens by a capacity computed from the
-        # static sequence length, so padding changes routing.  Those
-        # prefill at exact prompt lengths (compile per length, as the
-        # wave server always did).
-        self._pad_prompts = all(t == "attn" for t in model.cfg.layer_types)
+        # per-family capabilities (padding / paging / mixed-step), probed
+        # piecewise: a family that cannot page can still pad, one that
+        # cannot do either still serves through the serialized arena path
+        self.caps = probe_family_caps(model, max_batch=self.max_batch,
+                                      capacity=self.capacity,
+                                      cache_dtype=cache_dtype)
+        self._pad_prompts = self.caps.pad_prompts
+        self.paged = bool(paged and self.caps.supports_paging)
+        # overlapped admission needs the unified mixed step; families
+        # without it keep the serialized scheduler (exact behavior of
+        # overlap=False)
+        self.overlap = bool(overlap and self.caps.supports_mixed_step)
+        if overlap_mode == "auto":
+            # a nontrivial data axis rules fused out twice over: the
+            # [1, B+S, D] mixed batch gives it nothing to shard (the
+            # launch replicates), and combined with a model axis the
+            # fused graph loses bitwise equality (see class docstring)
+            data_sharded = (mesh is not None
+                            and int(mesh.shape.get("data", 1)) > 1)
+            overlap_mode = "async" if data_sharded else "fused"
+        # resolved strategy (see class docstring); meaningless without
+        # overlap, so report "" there
+        self.overlap_mode = overlap_mode if self.overlap else ""
         self.prefill_shapes: set = set()    # admitted Sp values (observability)
 
-        # padding is also NOT inert when any attention ring is smaller
-        # than the padded length: prefill keeps the last `ring` entries,
-        # so pad tokens would evict real context and then be counted
-        # valid.  Sliding-window models (cfg.attn_window or a window
-        # override baked into the model) therefore prefill at exact
-        # lengths; detect them from the arena's ring capacities.
         arena_shapes = jax.eval_shape(
             lambda: model.init_arena(self.max_batch, self.capacity,
                                      dtype=cache_dtype))
-        self._pad_prompts &= self._min_ring(arena_shapes) >= self.capacity
-
-        # paged KV needs chunk-paddable full-causal attention everywhere:
-        # auto-select the arena for recurrent/moe (chunking changes
-        # routing capacity) and sliding-window stacks.  init_pool itself
-        # rejects windows — including a window override baked into the
-        # model at build time — so probe it abstractly.
-        self.paged = False
-        if (paged and model.init_pool is not None
-                and all(t == "attn" for t in model.cfg.layer_types)):
-            try:
-                jax.eval_shape(lambda: model.init_pool(1, 2,
-                                                       dtype=cache_dtype))
-                self.paged = True
-            except NotImplementedError:
-                pass
 
         # donation avoids a full arena/pool copy per step; CPU jax only
         # warns, so gate it on the backend.
@@ -227,6 +355,7 @@ class Engine:
         if mesh is not None:
             from jax.sharding import NamedSharding, PartitionSpec
             self._repl = NamedSharding(mesh, PartitionSpec())
+        self._mixed = None
         if self.paged:
             self.block_size = int(block_size)
             self.num_blocks = int(
@@ -247,6 +376,7 @@ class Engine:
             if mesh is not None:
                 from repro.dist.serving import (
                     make_decode_rows_paged_token_step,
+                    make_mixed_paged_token_step,
                     make_prefill_chunk_token_step)
                 pool_shapes = jax.eval_shape(
                     lambda: model.init_pool(self.num_blocks, self.block_size,
@@ -255,6 +385,9 @@ class Engine:
                     model, mesh, pool_shapes)
                 self._decode, _ = make_decode_rows_paged_token_step(
                     model, mesh, self.max_batch, pool_shapes)
+                if self.overlap_mode == "fused":
+                    self._mixed, _ = make_mixed_paged_token_step(
+                        model, mesh, self.max_batch, pool_shapes)
                 self.params = jax.device_put(params, p_sh)
                 # jit the init so the pool materializes directly in its
                 # sharded layout — works multi-process (no cross-process
@@ -270,16 +403,24 @@ class Engine:
                 self._decode = _shared_jit(
                     model, "decode_rows_paged_tokens",
                     donate_argnums=(2,) if donate else ())
+                if self.overlap_mode == "fused":
+                    self._mixed = _shared_jit(
+                        model, "mixed_step_paged_tokens",
+                        donate_argnums=(2,) if donate else ())
                 self._caches = model.init_pool(self.num_blocks,
                                                self.block_size,
                                                dtype=cache_dtype)
         elif mesh is not None:
             from repro.dist.serving import (make_decode_rows_token_step,
+                                            make_mixed_arena_token_step,
                                             make_slot_prefill_token_step)
             self._prefill, (p_sh, c_sh) = make_slot_prefill_token_step(
                 model, mesh, arena_shapes)
             self._decode, _ = make_decode_rows_token_step(
                 model, mesh, self.max_batch, arena_shapes)
+            if self.overlap_mode == "fused":
+                self._mixed, _ = make_mixed_arena_token_step(
+                    model, mesh, self.max_batch, arena_shapes)
             self.params = jax.device_put(params, p_sh)
             self._caches = jax.jit(
                 lambda: model.init_arena(self.max_batch, self.capacity,
@@ -290,6 +431,10 @@ class Engine:
                                         donate_argnums=(4,) if donate else ())
             self._decode = _shared_jit(model, "decode_rows_tokens",
                                        donate_argnums=(2,) if donate else ())
+            if self.overlap_mode == "fused":
+                self._mixed = _shared_jit(model, "mixed_step_tokens",
+                                          donate_argnums=(2,) if donate
+                                          else ())
             self._caches = model.init_arena(self.max_batch, self.capacity,
                                             dtype=cache_dtype)
 
@@ -319,12 +464,28 @@ class Engine:
         self._cur_dirty = True
         self._lengths_dirty = True
         self._tables_dirty = True
+
+        # overlapped-admission state.  `_stream`: the one admission whose
+        # prefill rides the mixed decode launches (the queue head; one
+        # chunk per step on the paged backend, the whole bucketed prompt
+        # in one mixed launch on the arena).  `_staged`: admissions whose
+        # prefill launches are all in flight but whose first token has
+        # not been resolved — their slots stay dead to decode (zero
+        # validity length / zeroed table row; paged block ids live in the
+        # entry's private table until installation).
+        self._stream: Optional[dict] = None
+        self._staged: List[dict] = []
         self._stats = {
             "admissions": 0,         # requests prefilled into a slot
             "admit_host_s": 0.0,     # host time launching admissions
             "prefill_wait_s": 0.0,   # blocked resolving prefill tokens
             "decode_steps": 0,
             "decode_s": 0.0,         # decode launch + [B]-token fetch
+            "decode_dispatch_s": 0.0,   # … its mirror-sync + launch half
+            "decode_fetch_s": 0.0,      # … its blocked-on-tokens half
+            "mixed_steps": 0,        # decode launches that carried a prefill
+            "overlapped_admissions": 0,  # first tokens resolved deferred
+                                         # (never blocked a decode dispatch)
             "topup_host_s": 0.0,     # paged block top-up / eviction work
             "replayed_tokens": 0,    # recompute replays (paged)
             "h2d_uploads": 0,        # mirror re-syncs (stale → upload)
@@ -338,8 +499,11 @@ class Engine:
         decode step time, mirror upload / token fetch accounting, and
         preemption counts.  `decode_fetch_elems`/`decode_fetch_dtype`
         record the actual per-decode-step device→host transfer (int32
-        token ids, one per slot — never logits)."""
-        return dict(self._stats, preemptions=self.num_preemptions)
+        token ids, one per slot — never logits).  `overlap_mode` is the
+        resolved overlap strategy ("fused" / "async", "" when the
+        serialized scheduler is active)."""
+        return dict(self._stats, preemptions=self.num_preemptions,
+                    overlap_mode=self.overlap_mode)
 
     def _put(self, x):
         """Upload host state to a device mirror (replicated on a mesh —
@@ -349,25 +513,6 @@ class Engine:
         if self._repl is not None:
             return jax.device_put(x, self._repl)
         return jax.device_put(x)
-
-    @staticmethod
-    def _min_ring(arena_shapes):
-        """Smallest ring-buffer capacity across attention cache leaves
-        ([layers, B, T, ...]); inf when the model has none."""
-        caps = []
-
-        def visit(path, leaf):
-            name = None
-            for k in reversed(path):
-                if hasattr(k, "key"):
-                    name = k.key
-                    break
-            if name in ("k", "v", "ckv", "kpe"):
-                caps.append(leaf.shape[2])
-            return leaf
-
-        jax.tree_util.tree_map_with_path(visit, arena_shapes)
-        return min(caps) if caps else float("inf")
 
     # ------------------------------------------------------------------
     # request intake
@@ -387,10 +532,9 @@ class Engine:
         """Pow2-bucketed table columns covering `num_tokens` positions
         (block-table slices are jit shapes: bucketing bounds compiles at
         O(log num_blocks) while per-step gather/kernel work tracks the
-        live maximum instead of the whole pool)."""
-        return min(bucket_length(blocks_needed(num_tokens,
-                                               self.block_size)),
-                   self.num_blocks)
+        live maximum instead of the whole pool; the mixed step reuses
+        the same width for its chunk table — see bucketing.table_width)."""
+        return table_width(num_tokens, self.block_size, self.num_blocks)
 
     def submit(self, prompt, max_new_tokens: int,
                eos_id: Optional[int] = None) -> int:
@@ -569,7 +713,21 @@ class Engine:
         self._slot_req[slot] = None
         self._gen[slot] = []
         self._replay[slot] = deque()  # rebuilt from gen_prefix on re-admission
-        self._allocator.free_partial(self._tables[slot])
+        # a mid-stream / staged slot holds its blocks in a private table
+        # (the slot's own row is still zeroed); evicting it cancels the
+        # in-flight admission — the launches already dispatched write
+        # into freed blocks, which the overwrite-before-valid invariant
+        # makes inert (every block is fully rewritten by whatever
+        # prefill re-allocates it before any position becomes valid)
+        if self._stream is not None and self._stream["slot"] == slot:
+            self._allocator.free_partial(self._stream["table"])
+            self._stream = None
+        elif any(e["slot"] == slot for e in self._staged):
+            e = next(e for e in self._staged if e["slot"] == slot)
+            self._staged.remove(e)
+            self._allocator.free_partial(e["table"])
+        else:
+            self._allocator.free_partial(self._tables[slot])
         self._tables[slot] = 0
         self._lengths[slot] = 0
         self._cur[slot] = 0
@@ -653,7 +811,22 @@ class Engine:
         it — finished requests free its blocks on subsequent steps.
         Preempted requests re-enter in uid position (ahead of every
         never-admitted request), so eviction never lets a younger
-        request overtake an older one and the queue stays uid-sorted."""
+        request overtake an older one and the queue stays uid-sorted.
+
+        With overlap enabled (`engine.overlap`), admission prefills ride
+        the decode launches (mixed steps) or dispatch asynchronously
+        alongside them, and first tokens resolve a step later, after the
+        decode fetch has already synced past them — same outputs,
+        bitwise (tests assert it), fewer and never-blocked launches."""
+        if self.overlap:
+            return self._step_overlapped()
+        return self._step_serialized()
+
+    @hot_loop
+    def _step_serialized(self) -> List[Request]:
+        """The blocking scheduler: resolve every admission's first token
+        before dispatching the decode step (overlap=False, and families
+        without a mixed step)."""
         finished: List[Request] = []
         while self._admit_round(finished):
             pass    # instant finishes free slots/blocks: try again
@@ -665,42 +838,7 @@ class Engine:
 
         t0 = time.perf_counter()
         if self.paged:
-            # top up the block covering this step's write position
-            # (billed to topup_host_s, not decode_s — under pressure
-            # this loop runs the preemption machinery, which is host
-            # bookkeeping, not decode-step time).
-            # "reserve" draws on the admission earmark (cannot fail);
-            # "recompute" allocates oldest-first from the free list and,
-            # when the pool runs dry, preempts the newest admission
-            # (LIFO) until a block frees up — evicting a slot always
-            # returns >= 1 block, so the inner loop terminates, and the
-            # oldest running request is never the victim while a younger
-            # one holds blocks, so it monotonically progresses (no
-            # livelock: every request eventually becomes oldest).
-            for s in sorted(active, key=lambda t: self._slot_req[t].uid):
-                if self._slot_req[s] is None:
-                    continue        # preempted by an earlier top-up
-                bi = int(self._lengths[s]) // self.block_size
-                if self._tables[s, bi] != 0:
-                    continue
-                if self.preemption == "reserve":
-                    (blk,) = self._allocator.alloc(1, reserved=True)
-                    self._slot_reserved[s] -= 1
-                else:
-                    while not self._allocator.can_allocate(1):
-                        victim = max(
-                            (t for t in range(self.max_batch)
-                             if self._slot_req[t] is not None),
-                            key=lambda t: self._slot_req[t].uid)
-                        self._preempt(victim)
-                        if victim == s:
-                            break
-                    if self._slot_req[s] is None:
-                        continue    # s itself was the newest admission
-                    (blk,) = self._allocator.alloc(1)
-                self._tables[s, bi] = blk
-                self._tables_dirty = True
-            self._stats["topup_host_s"] += time.perf_counter() - t0
+            self._topup_blocks(active)
             t0 = time.perf_counter()
             active = [s for s in active if self._slot_req[s] is not None]
             if not active:
@@ -737,11 +875,15 @@ class Engine:
         # logits never leave the device, which on a mesh would be a
         # model-sharded cross-host gather)
         self._cur_dev = toks_dev
+        t1 = time.perf_counter()
+        self._stats["decode_dispatch_s"] += t1 - t0
         # repro-lint: disable=host-sync-in-hot-loop -- this [B] int32 token
         # fetch IS the per-step device->host contract (never logits)
         nxt = np.asarray(toks_dev)
+        t2 = time.perf_counter()
         self._stats["decode_steps"] += 1
-        self._stats["decode_s"] += time.perf_counter() - t0
+        self._stats["decode_fetch_s"] += t2 - t1
+        self._stats["decode_s"] += t2 - t0
         self._stats["decode_fetch_elems"] = int(nxt.size)
         self._stats["decode_fetch_dtype"] = str(nxt.dtype)
         for s in active:
@@ -764,9 +906,411 @@ class Engine:
                 finished.append(self._finish(s))
         return finished
 
+    def _topup_blocks(self, active: List[int]) -> None:
+        """Top up the block covering this step's write position for each
+        decoding row (billed to topup_host_s, not decode_s — under
+        pressure this loop runs the preemption machinery, which is host
+        bookkeeping, not decode-step time).
+
+        "reserve" draws on the admission earmark (cannot fail);
+        "recompute" allocates oldest-first from the free list and, when
+        the pool runs dry, preempts the newest admission (LIFO) until a
+        block frees up — evicting a slot always returns >= 1 block, so
+        the inner loop terminates, and the oldest running request is
+        never the victim while a younger one holds blocks, so it
+        monotonically progresses (no livelock: every request eventually
+        becomes oldest).  Mid-stream and staged admissions hold their
+        slots too, and being the newest admissions they are the first
+        LIFO victims — `_preempt` cancels the in-flight admission and
+        frees its private table."""
+        t0 = time.perf_counter()
+        for s in sorted(active, key=lambda t: self._slot_req[t].uid):
+            if self._slot_req[s] is None:
+                continue        # preempted by an earlier top-up
+            bi = int(self._lengths[s]) // self.block_size
+            if self._tables[s, bi] != 0:
+                continue
+            if self.preemption == "reserve":
+                (blk,) = self._allocator.alloc(1, reserved=True)
+                self._slot_reserved[s] -= 1
+            else:
+                while not self._allocator.can_allocate(1):
+                    victim = max(
+                        (t for t in range(self.max_batch)
+                         if self._slot_req[t] is not None),
+                        key=lambda t: self._slot_req[t].uid)
+                    self._preempt(victim)
+                    if victim == s:
+                        break
+                if self._slot_req[s] is None:
+                    continue    # s itself was the newest admission
+                (blk,) = self._allocator.alloc(1)
+            self._tables[s, bi] = blk
+            self._tables_dirty = True
+        self._stats["topup_host_s"] += time.perf_counter() - t0
+
+    # ------------------------------------------------------------------
+    # overlapped admission (the async scheduler + unified mixed step)
+    # ------------------------------------------------------------------
+
+    def _start_stream(self, req: Request, slot: int) -> None:
+        """Begin streaming `req`'s prefill through the decode launches.
+        The slot is claimed (it counts as active and can be preempted)
+        but stays DEAD to decode — zero validity length, zeroed table
+        row — until `_resolve_staged` installs it; on the paged backend
+        the prompt's blocks live in a private table until then, so the
+        fused decode's writes for this slot route to the null block."""
+        plen = len(req.prompt)
+        self._slot_req[slot] = req
+        self._gen[slot] = []
+        if self.paged:
+            n_prompt = blocks_needed(plen, self.block_size)
+            blocks = self._allocator.alloc(n_prompt)
+            if self.preemption == "reserve":
+                need = self._worst_case_blocks(plen, req.max_new_tokens)
+                self._allocator.reserve(need - n_prompt)
+                self._slot_reserved[slot] = need - n_prompt
+            table = np.zeros(self.num_blocks, np.int32)
+            table[:n_prompt] = blocks
+            c = self.prefill_chunk
+            self.prefill_shapes.add(c)
+            self._stream = {"req": req, "slot": slot, "plen": plen,
+                            "table": table, "n_prompt": n_prompt,
+                            "i": 0, "total": chunks_needed(plen, c),
+                            "tok": None}
+        else:
+            # overlap requires caps.pad_prompts, so the arena prompt is
+            # always the bucketed padded shape the mixed step compiled
+            sp = min(bucket_length(plen, _PREFILL_FLOOR), self.capacity)
+            self.prefill_shapes.add(sp)
+            toks = np.zeros((1, sp), np.int32)
+            toks[0, :plen] = req.prompt
+            self._stream = {"req": req, "slot": slot, "plen": plen,
+                            "tokens": toks, "i": 0, "total": 1,
+                            "tok": None}
+
+    def _stage_admit(self, req: Request, slot: int) -> None:
+        """Admit `req` with async-dispatched prefill launches: every
+        launch goes in flight now, nothing is resolved, and the slot
+        stays dead to decode until `_resolve_staged` (with the stream's
+        landing, preserving FIFO start order).  This is the overlap
+        analogue of `_admit_paged` for requests behind the stream —
+        same launches, same shapes, deferred resolution.  Paged-only:
+        see `_admission_phase` for why the arena cannot stage."""
+        assert self.paged
+        plen = len(req.prompt)
+        self._slot_req[slot] = req
+        self._gen[slot] = []
+        n_prompt = blocks_needed(plen, self.block_size)
+        blocks = self._allocator.alloc(n_prompt)
+        if self.preemption == "reserve":
+            need = self._worst_case_blocks(plen, req.max_new_tokens)
+            self._allocator.reserve(need - n_prompt)
+            self._slot_reserved[slot] = need - n_prompt
+        table = np.zeros(self.num_blocks, np.int32)
+        table[:n_prompt] = blocks
+        c = self.prefill_chunk
+        self.prefill_shapes.add(c)
+        seq = req.prompt
+        tok = None
+        ctab = np.ascontiguousarray(table[:self._table_width(plen)])
+        for i in range(chunks_needed(plen, c)):
+            chunk = seq[i * c:(i + 1) * c]
+            toks = np.zeros((1, c), np.int32)
+            toks[0, :len(chunk)] = chunk
+            tok, self._caches = self._prefill(
+                self.params, toks, np.int32(len(chunk)), np.int32(i * c),
+                ctab, self._caches)
+        self._staged.append({"req": req, "slot": slot, "plen": plen,
+                             "tok": tok, "table": table,
+                             "n_prompt": n_prompt})
+
+    def _admission_phase(self) -> None:
+        """Overlapped admission: pop the queue head into the chunk
+        stream (its prefill rides the decode launches) and, on the
+        paged backend, stage any further admissible requests into free
+        slots with async prefill launches.  FIFO is preserved twice
+        over — requests are popped strictly head-first (a blocked head
+        blocks everything behind it), and staged slots only come alive
+        together with the stream they queued behind.
+
+        Bulk staging is paged-only: a staged paged prefill writes into
+        private blocks while the dead slot's zeroed table row routes
+        the decode launch's writes to the null block, but the arena
+        decode ring-inserts at a cache-carried per-slot ptr — a decode
+        launch after a staged arena prefill would advance that ptr and
+        clobber position plen of the freshly written row.  The arena
+        admits through the stream only, where the mixed trace runs the
+        prefill AFTER the decode and `_write_slot` overwrites the whole
+        row (garbage included) and resets the ptr."""
+        t0 = time.perf_counter()
+        free = deque(s for s in range(self.max_batch)
+                     if self._slot_req[s] is None)
+        # async-mode paged admission needs no stream at all: chunk
+        # launches are write-disjoint from the decode whatever their
+        # dispatch order, so the queue head bulk-stages like everyone
+        # behind it — all its chunks go in flight this step instead of
+        # riding one decode launch each (the one-chunk-per-step stream
+        # exists for the fused trace, which carries exactly one chunk).
+        # Skipping the stream also keeps the decode table width at the
+        # active rows' own bucket: no per-stream widen/shrink churn.
+        stream_ok = not (self.paged and self._mixed is None)
+        if (stream_ok and self._stream is None and self._queue and free
+                and self._can_admit(self._queue[0])):
+            self._start_stream(self._queue.popleft(), free.popleft())
+            self._stats["admissions"] += 1
+        while (self.paged and self._queue and free
+               and self._can_admit(self._queue[0])):
+            self._stage_admit(self._queue.popleft(), free.popleft())
+            self._stats["admissions"] += 1
+        self._stats["admit_host_s"] += time.perf_counter() - t0
+
+    def _drain_stream(self) -> None:
+        """Flush an in-flight stream's remaining prefill launches
+        through the plain prefill step and stage it for resolution —
+        the no-decode-rows path (nothing to ride; equivalent to the
+        serialized admission, which is exactly what the situation is)."""
+        st, self._stream = self._stream, None
+        t0 = time.perf_counter()
+        if not self.paged:
+            tok, self._caches = self._prefill(
+                self.params, st["tokens"], np.int32(st["plen"]),
+                np.int32(st["slot"]), self._caches)
+            entry = {"req": st["req"], "slot": st["slot"],
+                     "plen": st["plen"], "tok": tok}
+        else:
+            seq = st["req"].prompt
+            c = self.prefill_chunk
+            ctab = np.ascontiguousarray(
+                st["table"][:self._table_width(st["plen"])])
+            tok = st["tok"]
+            for i in range(st["i"], st["total"]):
+                chunk = seq[i * c:(i + 1) * c]
+                toks = np.zeros((1, c), np.int32)
+                toks[0, :len(chunk)] = chunk
+                tok, self._caches = self._prefill(
+                    self.params, toks, np.int32(len(chunk)),
+                    np.int32(i * c), ctab, self._caches)
+            entry = {"req": st["req"], "slot": st["slot"],
+                     "plen": st["plen"], "tok": tok, "table": st["table"],
+                     "n_prompt": st["n_prompt"]}
+        self._stats["admit_host_s"] += time.perf_counter() - t0
+        self._staged.append(entry)
+
+    @hot_loop
+    def _resolve_staged(self, finished: List[Request],
+                        deferred: bool = True) -> None:
+        """Install every staged admission whose prefill generation has
+        landed: block table + validity length first (the slot becomes
+        decode-visible), then the first token — or the replay queue for
+        a recompute re-admission, whose first token is already known.
+
+        Held back while a stream is in flight: the stream is always the
+        OLDEST unresolved admission (heads pop strictly in order), so
+        resolving younger staged slots early would let them start
+        decoding ahead of it and break FIFO completion order.  Resolved
+        oldest-first for the same reason.
+
+        In the deferred case (step start) the token fetch costs ~zero
+        wall time: the previous step ended by fetching the [B] decode
+        tokens of the very launch generation that produced these
+        prefill tokens, so the device has already caught up."""
+        if self._stream is not None or not self._staged:
+            return
+        t1 = time.perf_counter()
+        entries = sorted(self._staged, key=lambda e: e["req"].uid)
+        self._staged = []
+        for e in entries:
+            req, slot, plen = e["req"], e["slot"], e["plen"]
+            if self.paged:
+                n = e["n_prompt"]
+                self._tables[slot, :n] = e["table"][:n]
+                self._tables_dirty = True
+            self._lengths[slot] = plen
+            self._lengths_dirty = True
+            if deferred:
+                self._stats["overlapped_admissions"] += 1
+            if req.gen_prefix:
+                # recompute re-admission: resume from the replay queue
+                # (the prefill's token would just re-derive gen_prefix[0])
+                self._cur[slot] = req.gen_prefix[0]
+                self._cur_dirty = True
+                self._replay[slot] = deque(req.gen_prefix[1:])
+                continue
+            # repro-lint: disable=host-sync-in-hot-loop -- deferred
+            # first-token resolution: the prior step's [B] decode fetch
+            # already synced past the launch that produced this token
+            tok = int(np.asarray(e["tok"]))
+            f = self._resolve_admission(req, slot, tok)
+            if f is not None:
+                finished.append(f)
+        self._stats["prefill_wait_s"] += time.perf_counter() - t1
+
+    @hot_loop
+    def _step_overlapped(self) -> List[Request]:
+        """One scheduler pass of the overlapped engine: install staged
+        admissions, launch this step's admissions asynchronously, then
+        dispatch ONE decode launch — mixed with the stream's prefill
+        unit when a stream is in flight — without ever blocking on a
+        first token between admission and dispatch."""
+        finished: List[Request] = []
+        self._resolve_staged(finished)
+        self._admission_phase()
+
+        st_slot = self._stream["slot"] if self._stream is not None else -1
+        staged_slots = {e["slot"] for e in self._staged}
+        active = [s for s in range(self.max_batch)
+                  if self._slot_req[s] is not None
+                  and s != st_slot and s not in staged_slots]
+        if not active:
+            # no decode launch to overlap with: flush + resolve now
+            # (cold start / everything just finished — the serialized
+            # admission cost is genuinely unavoidable here)
+            if self._stream is not None:
+                self._drain_stream()
+            self._resolve_staged(finished, deferred=False)
+            active = [s for s in range(self.max_batch)
+                      if self._slot_req[s] is not None]
+            if not active:
+                return finished
+
+        if self.paged:
+            self._topup_blocks(active)
+            t0 = time.perf_counter()
+            active = [s for s in active if self._slot_req[s] is not None]
+            if not active:
+                return finished
+            # one width covers the decode tables AND the stream's chunk
+            # table, so a mixed launch adds no new width families
+            hi = max(int(self._lengths[s]) + 1 for s in active)
+            if self._stream is not None:
+                hi = max(hi, self._stream["plen"])
+            w = self._table_width(hi)
+            if self._tables_dirty or self._tables_dev_w != w:
+                self._tables_dev = self._put(
+                    np.ascontiguousarray(self._tables[:, :w]))
+                self._tables_dev_w = w
+                self._tables_dirty = False
+            if self._lengths_dirty or self._lengths_dev is None:
+                self._lengths_dev = self._put(self._lengths)
+                self._lengths_dirty = False
+            if self._cur_dirty or self._cur_dev is None:
+                self._cur_dev = self._put(self._cur)
+                self._cur_dirty = False
+            if self._stream is not None:
+                st = self._stream
+                c = self.prefill_chunk
+                chunk = st["req"].prompt[st["i"] * c:(st["i"] + 1) * c]
+                ctoks = np.zeros((1, c), np.int32)
+                ctoks[0, :len(chunk)] = chunk
+                if self._mixed is not None:
+                    toks_dev, self._caches, self._lengths_dev, p_tok = \
+                        self._mixed(self.params, self._cur_dev, self._caches,
+                                    self._tables_dev, self._lengths_dev,
+                                    ctoks, np.int32(len(chunk)),
+                                    np.int32(st["i"] * c),
+                                    np.ascontiguousarray(st["table"][:w]))
+                    self._stats["mixed_steps"] += 1
+                else:
+                    # async composition: the same decode and chunk-prefill
+                    # graphs the serialized scheduler runs, dispatched
+                    # back-to-back with no fetch in between (write sets
+                    # disjoint: the dead slot routes to the null block,
+                    # the chunk writes its private blocks)
+                    toks_dev, self._caches, self._lengths_dev = self._decode(
+                        self.params, self._cur_dev, self._caches,
+                        self._tables_dev, self._lengths_dev)
+                    p_tok, self._caches = self._prefill(
+                        self.params, ctoks, np.int32(len(chunk)),
+                        np.int32(st["i"] * c),
+                        np.ascontiguousarray(
+                            st["table"][:self._table_width(st["plen"])]),
+                        self._caches)
+                st["i"] += 1
+                st["tok"] = p_tok
+                if st["i"] == st["total"]:
+                    self._stream = None
+                    self._staged.append(
+                        {"req": st["req"], "slot": st["slot"],
+                         "plen": st["plen"], "tok": p_tok,
+                         "table": st["table"], "n_prompt": st["n_prompt"]})
+            else:
+                toks_dev, self._caches, self._lengths_dev = self._decode(
+                    self.params, self._cur_dev, self._caches,
+                    self._tables_dev, self._lengths_dev)
+        else:
+            t0 = time.perf_counter()
+            if self._lengths_dirty or self._lengths_dev is None:
+                self._lengths_dev = self._put(self._lengths)
+                self._lengths_dirty = False
+            if self._cur_dirty or self._cur_dev is None:
+                self._cur_dev = self._put(self._cur)
+                self._cur_dirty = False
+            if self._stream is not None:
+                st = self._stream
+                if self._mixed is not None:
+                    toks_dev, self._caches, self._lengths_dev, p_tok = \
+                        self._mixed(self.params, self._cur_dev, self._caches,
+                                    self._lengths_dev, st["tokens"],
+                                    np.int32(st["plen"]),
+                                    np.int32(st["slot"]))
+                    self._stats["mixed_steps"] += 1
+                else:
+                    # async composition: decode FIRST (the dead slot's
+                    # garbage ring write must land before the prefill
+                    # overwrites the whole row and resets its ptr — the
+                    # same order the mixed trace uses), then the same
+                    # slot-prefill graph the serialized scheduler runs,
+                    # with no fetch in between
+                    toks_dev, self._caches, self._lengths_dev = self._decode(
+                        self.params, self._cur_dev, self._caches,
+                        self._lengths_dev)
+                    p_tok, self._caches = self._prefill(
+                        self.params, st["tokens"], np.int32(st["plen"]),
+                        np.int32(st["slot"]), self._caches)
+                self._stream = None
+                self._staged.append({"req": st["req"], "slot": st["slot"],
+                                     "plen": st["plen"], "tok": p_tok})
+            else:
+                toks_dev, self._caches, self._lengths_dev = self._decode(
+                    self.params, self._cur_dev, self._caches,
+                    self._lengths_dev)
+        self._cur_dev = toks_dev
+        t1 = time.perf_counter()
+        self._stats["decode_dispatch_s"] += t1 - t0
+        # repro-lint: disable=host-sync-in-hot-loop -- this [B] int32 token
+        # fetch IS the per-step device->host contract (never logits)
+        nxt = np.asarray(toks_dev)
+        t2 = time.perf_counter()
+        self._stats["decode_steps"] += 1
+        self._stats["decode_fetch_s"] += t2 - t1
+        self._stats["decode_s"] += t2 - t0
+        self._stats["decode_fetch_elems"] = int(nxt.size)
+        self._stats["decode_fetch_dtype"] = str(nxt.dtype)
+        # uid order, not slot order: overlapped slot assignment does not
+        # track uid order across stream generations, and same-step
+        # finishes must still complete oldest-first
+        for s in sorted(active, key=lambda t: self._slot_req[t].uid):
+            self._lengths[s] += 1
+            if self._replay[s]:
+                self._cur[s] = self._replay[s].popleft()
+                self._cur_dirty = True
+                self._stats["replayed_tokens"] += 1
+                continue
+            tok = int(nxt[s])
+            self._gen[s].append(tok)
+            self._cur[s] = tok
+            req = self._slot_req[s]
+            if (len(req.gen_prefix) + len(self._gen[s]) >= req.max_new_tokens
+                    or (req.eos_id is not None and tok == req.eos_id)):
+                finished.append(self._finish(s))
+        return finished
+
     def run(self) -> List[Request]:
         """Drain queue + batch; returns every request completed so far
-        (accumulating across earlier step() calls)."""
+        (accumulating across earlier step() calls).  Mid-stream and
+        staged admissions hold their slots (they count as active), so
+        the loop cannot exit with an admission half-landed."""
         while self._queue or self.num_active:
             self.step()
         return list(self._done)

@@ -591,3 +591,135 @@ def test_cli_list_rules():
     assert res.returncode == 0
     for rule in EXPECTED_RULES:
         assert rule in res.stdout
+
+
+# ---------------------------------------------------------------------------
+# --fix: the two mechanical autofixes (wall-clock durations, pop(0))
+# ---------------------------------------------------------------------------
+
+from repro.analysis.fixes import fix_source  # noqa: E402
+
+
+def fix(src):
+    new, n = fix_source(textwrap.dedent(src), "fixture.py")
+    return new, n
+
+
+def test_fix_wall_clock_duration_rewrites_both_ends():
+    new, n = fix("""
+        import time
+        def f():
+            t0 = time.time()
+            work()
+            return time.time() - t0
+    """)
+    assert n == 2
+    assert "time.monotonic() - t0" in new
+    assert "t0 = time.monotonic()" in new
+    assert "time.time()" not in new
+    assert not lint(new).active
+
+
+def test_fix_leaves_bare_timestamps_alone():
+    src = """
+        import time
+        def stamp():
+            return {"ts": time.time()}
+    """
+    new, n = fix(src)
+    assert n == 0 and new == textwrap.dedent(src)
+
+
+def test_fix_pop0_on_deque_receiver_rewrites_method_only():
+    new, n = fix("""
+        from collections import deque
+        q = deque()
+        def drain():
+            while q:
+                item = q.pop(0)
+    """)
+    assert n == 1
+    assert "q.popleft()" in new and "pop(0)" not in new
+    assert new.count("deque(") == 1          # ctor untouched
+
+
+def test_fix_pop0_on_list_receiver_converts_to_deque_with_import():
+    new, n = fix("""
+        import os
+        class S:
+            def __init__(self):
+                self.queue = []
+            def drain(self):
+                while self.queue:
+                    item = self.queue.pop(0)
+            def requeue(self, x):
+                self.queue.insert(0, x)
+    """)
+    assert n == 3        # pop site + insert site + [] ctor
+    assert "self.queue.popleft()" in new
+    assert "self.queue.appendleft(x)" in new
+    assert "self.queue = deque()" in new
+    assert "from collections import deque" in new
+    # the import lands after the existing imports, once
+    assert new.count("from collections import deque") == 1
+    assert not lint(new).active
+
+
+def test_fix_skips_unknown_receiver():
+    """A receiver whose initializer the fixer cannot prove rewritable
+    must be left alone — breaking a real list is worse than O(n)."""
+    src = """
+        def drain(q):
+            while q:
+                item = q.pop(0)
+    """
+    new, n = fix(src)
+    assert n == 0 and new == textwrap.dedent(src)
+    assert lint(textwrap.dedent(src)).active   # the finding remains
+
+
+def test_fix_respects_pragmas():
+    src = """
+        import time
+        def f():
+            t0 = time.time()  # repro-lint: disable=wall-clock-duration -- fixture
+            return time.time() - t0  # repro-lint: disable=wall-clock-duration -- fixture
+    """
+    new, n = fix(src)
+    assert n == 0 and new == textwrap.dedent(src)
+
+
+def test_fix_is_idempotent():
+    """fix_source on its own output yields zero further edits."""
+    first, n1 = fix("""
+        import time
+        from collections import deque
+        class S:
+            def __init__(self):
+                self.q = []
+                self.t0 = time.time()
+            def drain(self):
+                while self.q:
+                    self.q.pop(0)
+            def age(self):
+                return time.time() - self.t0
+    """)
+    assert n1 > 0
+    second, n2 = fix_source(first, "fixture.py")
+    assert n2 == 0 and second == first
+    assert not lint(first).active
+
+
+def test_cli_fix_applies_and_converges(tmp_path):
+    bad = tmp_path / "mod.py"
+    bad.write_text(textwrap.dedent("""
+        import time
+        def wait():
+            t0 = time.time()
+            return time.time() - t0
+    """))
+    first = _run_cli("--fix", str(tmp_path))
+    assert first.returncode == 0 and "2 fix(es)" in first.stdout
+    assert "time.monotonic()" in bad.read_text()
+    again = _run_cli("--fix", "--check", str(tmp_path))
+    assert again.returncode == 0 and "0 fix(es)" in again.stdout

@@ -10,7 +10,8 @@ import pytest
 from proptest import property_sweep
 from repro.configs import get_smoke
 from repro.models import build_model
-from repro.serve import Engine, bucket_length, num_buckets
+from repro.serve import (Engine, FamilyCaps, bucket_length, num_buckets,
+                         probe_family_caps)
 
 with warnings.catch_warnings():
     warnings.simplefilter("ignore", DeprecationWarning)
@@ -840,3 +841,165 @@ def test_engine_sliding_window_exact_prefill():
         tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
         want.append(int(tok[0, 0]))
     np.testing.assert_array_equal(out, np.asarray(want, np.int32))
+
+
+# ---------------------------------------------------------------------------
+# overlapped admission: capability flags, serialized-vs-overlapped bit
+# identity (preemption-during-overlap included), stats schema
+# ---------------------------------------------------------------------------
+
+
+def _mla_cfg():
+    from repro.configs.base import ArchConfig, MLAConfig
+    return ArchConfig(name="mla-overlap-t", family="dense", source="test",
+                      num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+                      d_ff=128, vocab_size=256, tie_embeddings=True,
+                      mla=MLAConfig(kv_lora_rank=16, q_lora_rank=32,
+                                    qk_nope_head_dim=16, qk_rope_head_dim=8,
+                                    v_head_dim=16))
+
+
+# (prompt_len, budget, arrival_step) — staggered so admissions land
+# while other rows decode (the serialized scheduler would stall them)
+_STAGGER = [(9, 6, 0), (5, 8, 0), (7, 5, 2), (4, 7, 3), (6, 6, 5)]
+
+
+def _run_staggered(model, cfg, params, *, paged, overlap,
+                   overlap_mode="auto", num_blocks=None, snapshots=None):
+    """Drive `_STAGGER` through a fresh engine; returns (outputs in
+    submit order, final stats)."""
+    eng = Engine(model, params, max_batch=2, max_len=24, paged=paged,
+                 block_size=4, prefill_chunk=4, overlap=overlap,
+                 overlap_mode=overlap_mode, num_blocks=num_blocks)
+    rng = np.random.default_rng(7)
+    reqs = [(rng.integers(0, cfg.vocab_size, (int(n),)), int(b))
+            for n, b, _ in _STAGGER]
+    outs, uids, nxt, step_i = {}, [], 0, 0
+    while nxt < len(reqs) or eng.num_active or eng.pending:
+        while nxt < len(reqs) and _STAGGER[nxt][2] <= step_i:
+            p, b = reqs[nxt]
+            uids.append(eng.submit(p, max_new_tokens=b))
+            nxt += 1
+        for r in eng.step():
+            outs[r.uid] = list(r.output)
+        if snapshots is not None:
+            snapshots.append(eng.stats)
+        step_i += 1
+    return [outs[u] for u in uids], eng.stats
+
+
+def test_family_capability_flags():
+    """The monolithic fallback table is now piecewise caps: a dense
+    full-attention stack opts into everything, a recurrent stack into
+    nothing — and the engine degrades to exactly the caps it probed."""
+    cfg = get_smoke("qwen2-0.5b")
+    model = build_model(cfg)
+    caps = probe_family_caps(model, max_batch=2, capacity=32)
+    assert caps == FamilyCaps(pad_prompts=True, supports_paging=True,
+                              supports_chunked_prefill=True,
+                              supports_mixed_step=True)
+
+    rcfg = get_smoke("rwkv6-1.6b")
+    rmodel = build_model(rcfg)
+    rcaps = probe_family_caps(rmodel, max_batch=2, capacity=32)
+    assert rcaps == FamilyCaps(pad_prompts=False, supports_paging=False,
+                               supports_chunked_prefill=False,
+                               supports_mixed_step=False)
+    # engine resolution follows the caps: paged + overlap silently off
+    eng = Engine(rmodel, rmodel.init(jax.random.PRNGKey(0)),
+                 max_batch=1, max_len=16, paged=True)
+    assert not eng.paged and not eng.overlap
+    assert eng.stats["overlap_mode"] == ""
+
+
+@pytest.mark.parametrize("paged", [False, True])
+@pytest.mark.parametrize("family", ["gqa", "mla"])
+def test_overlap_vs_serialized_bit_identity(served, family, paged):
+    """The house gate for the overlapped scheduler: byte-for-byte the
+    serialized baseline's outputs, arena + paged, GQA + MLA — with the
+    paged pool starved (num_blocks=6) so preemption fires while
+    overlapped admissions are in flight."""
+    if family == "gqa":
+        cfg, model, params = served
+    else:
+        cfg = _mla_cfg()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+    kw = {"num_blocks": 6} if paged else {}
+    ser, st_s = _run_staggered(model, cfg, params, paged=paged,
+                               overlap=False, **kw)
+    ov, st_o = _run_staggered(model, cfg, params, paged=paged,
+                              overlap=True, **kw)
+    assert ser == ov
+    assert st_o["overlap_mode"] == "fused"      # host: auto picks fused
+    assert st_o["mixed_steps"] > 0
+    assert st_o["overlapped_admissions"] > 0
+    assert st_s["mixed_steps"] == st_s["overlapped_admissions"] == 0
+    if paged:
+        # the pool is tight enough that BOTH schedulers preempted —
+        # identity above covers preemption-during-overlap
+        assert st_s["preemptions"] > 0 and st_o["preemptions"] > 0
+
+
+def test_overlap_async_mode_bit_identity(served):
+    """overlap_mode="async" (what auto picks on data-sharded meshes,
+    forced here on host) reuses the serialized graphs — identity must
+    hold with zero mixed launches."""
+    cfg, model, params = served
+    ser, _ = _run_staggered(model, cfg, params, paged=True,
+                            overlap=False, num_blocks=6)
+    ov, st = _run_staggered(model, cfg, params, paged=True, overlap=True,
+                            overlap_mode="async", num_blocks=6)
+    assert ser == ov
+    assert st["overlap_mode"] == "async"
+    assert st["mixed_steps"] == 0
+    assert st["overlapped_admissions"] > 0
+
+
+def test_overlap_mode_validated(served):
+    cfg, model, params = served
+    with pytest.raises(ValueError, match="overlap_mode"):
+        Engine(model, params, max_batch=1, max_len=16,
+               overlap_mode="eager")
+
+
+def test_engine_stats_schema_and_monotone(served):
+    """Every stats key is present in every snapshot, counters never
+    decrease across steps, and the decode timing split is exact:
+    decode_s == decode_dispatch_s + decode_fetch_s."""
+    import math
+
+    cfg, model, params = served
+    snaps = []
+    _run_staggered(model, cfg, params, paged=True, overlap=True,
+                   snapshots=snaps)
+    keys = {"admissions", "admit_host_s", "prefill_wait_s",
+            "decode_steps", "decode_s", "decode_dispatch_s",
+            "decode_fetch_s", "topup_host_s", "h2d_uploads",
+            "replayed_tokens", "mixed_steps", "overlapped_admissions",
+            "decode_fetch_elems", "decode_fetch_dtype", "preemptions",
+            "overlap_mode"}
+    counters = keys - {"decode_fetch_elems", "decode_fetch_dtype",
+                       "overlap_mode"}
+    assert snaps and all(keys <= set(s) for s in snaps)
+    for prev, cur in zip(snaps, snaps[1:]):
+        for k in counters:
+            assert cur[k] >= prev[k], f"{k} went backwards"
+    last = snaps[-1]
+    assert math.isclose(last["decode_s"], last["decode_dispatch_s"]
+                        + last["decode_fetch_s"], rel_tol=1e-9)
+    assert last["mixed_steps"] <= last["decode_steps"]
+    assert last["overlapped_admissions"] <= last["admissions"]
+    assert last["overlap_mode"] in ("fused", "async", "")
+
+
+def test_chunks_needed_boundaries():
+    """Exact chunk multiples must not round up an extra launch."""
+    from repro.serve import chunks_needed
+    for c in (1, 4, 16, 32):
+        for k in (1, 2, 5):
+            assert chunks_needed(k * c, c) == k          # exact multiple
+            assert chunks_needed(k * c + 1, c) == k + 1  # one past
+            if c > 1:
+                assert chunks_needed(k * c - 1, c) == k  # one short
+    assert chunks_needed(1, 4) == 1
