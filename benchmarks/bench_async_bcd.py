@@ -1,13 +1,13 @@
 """Async-vs-lockstep API-BCD benchmark on a real multi-process runtime.
 
     PYTHONPATH=src python benchmarks/bench_async_bcd.py \
-        [--quick] [--check] [--processes 2] [--out BENCH_async_bcd.json]
+        [--quick] [--check] [--processes 4] [--out BENCH_async_bcd.json]
 
-Two arms, both shelled out to `repro.launch.train_async` (each spawns
-``--processes`` jax processes exchanging token-block updates through
-the jax.distributed coordination service), with process 1 slowed by
-``--straggle-factor`` (default 3x — every one of its updates is padded
-to 3x the nominal ``--min-update-ms`` floor):
+Arms, all shelled out to `repro.launch.train_async` (each spawns
+``--processes`` jax processes exchanging token-block updates), with
+process 1 slowed by ``--straggle-factor`` (default 3x — every one of
+its updates is padded to 3x the nominal ``--min-update-ms`` floor),
+each run over BOTH the jax-coordination and file transports:
 
   * **lockstep** — ``--max-delay 0 --local-steps 1``: the synchronous
     superstep baseline.  Every round, every process waits for the
@@ -16,18 +16,27 @@ to 3x the nominal ``--min-update-ms`` floor):
     staleness plus speed-adapted update rates.  Fast processes take L
     walk updates between syncs; the straggler syncs after
     proportionally fewer, so nobody stalls.
+  * **async+mid** — async plus ``--mid-round``: peer deltas are applied
+    *between* local steps at the schedule's deterministic ingestion
+    points, so each update computes against a fresher view (the
+    per-update efficiency loss the ROADMAP attributes to sync-only
+    folding shrinks).
+  * **async+mid+measured** — ``--measured-speeds``: adaptive rates are
+    driven by measured per-update wall time (quantized speed buckets
+    agreed through the KV) instead of the declared straggle vector.
 
-The async arm runs **twice** with the same seed to demonstrate digest
-reproducibility (the deterministic schedule makes seeded async runs
-bitwise repeatable even though wall-clock interleaving varies).
+The mid and measured arms run **twice** with the same seed to
+demonstrate digest reproducibility, and every arm's file-transport
+digest must equal its jax-transport digest (the numerics never see the
+transport).
 
-Headline metric: wall-clock time for the async arm's shared estimate to
-reach the lockstep arm's **final** objective (read post-hoc from the
-merged per-process traces), and the speedup over the lockstep arm's
-full wall time.  The JSON also records comm-event counts for both arms.
-``--check`` gates on: async reached the lockstep-final objective, did
-so faster than lockstep, and the two async runs produced the same
-digest.
+Headline metrics: wall-clock time for each async arm's shared estimate
+to reach the lockstep arm's **final** objective (read post-hoc from the
+merged per-process traces), the speedup over the lockstep arm's full
+wall time, and per-update efficiency (objective progress per applied
+update, plus update throughput).  ``--check`` gates on: digests
+reproducible across repeats and transports, staleness and view lag
+within the bound, async faster than lockstep, and async+mid at >= 1.2x.
 """
 from __future__ import annotations
 
@@ -41,10 +50,19 @@ import tempfile
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(ROOT, "src")
 
+ARM_FLAGS = {
+    "lockstep": ["--max-delay", "0", "--local-steps", "1"],
+    "async": ["--adaptive"],
+    "async+mid": ["--adaptive", "--mid-round"],
+    "async+mid+measured": ["--adaptive", "--mid-round",
+                           "--measured-speeds"],
+}
 
-def run_arm(args, mode: str, tmp_out: str) -> dict:
+
+def run_arm(args, arm: str, transport: str, tmp_out: str) -> dict:
     cmd = [sys.executable, "-m", "repro.launch.train_async",
            "--processes", str(args.processes),
+           "--transport", transport,
            "--agents", str(args.agents),
            "--walks", str(args.walks),
            "--subsample", str(args.subsample),
@@ -53,12 +71,12 @@ def run_arm(args, mode: str, tmp_out: str) -> dict:
            "--min-update-ms", str(args.min_update_ms),
            "--seed", str(args.seed),
            "--timeout", str(args.timeout),
-           "--out", tmp_out]
-    if mode == "async":
+           "--out", tmp_out, *ARM_FLAGS[arm]]
+    if arm != "lockstep":
         cmd += ["--max-delay", str(args.max_delay),
-                "--local-steps", str(args.local_steps), "--adaptive"]
-    else:
-        cmd += ["--max-delay", "0", "--local-steps", "1"]
+                "--local-steps", str(args.local_steps)]
+    if "measured" in arm:
+        cmd += ["--rate-rounds", str(args.rate_rounds)]
     env = dict(os.environ)
     env["PYTHONPATH"] = (SRC + os.pathsep + env["PYTHONPATH"]
                          if env.get("PYTHONPATH") else SRC)
@@ -67,7 +85,8 @@ def run_arm(args, mode: str, tmp_out: str) -> dict:
     sys.stdout.write(res.stdout)
     if res.returncode != 0:
         sys.stderr.write(res.stdout)
-        raise SystemExit(f"{mode} arm failed (rc={res.returncode})")
+        raise SystemExit(f"{arm}/{transport} arm failed "
+                         f"(rc={res.returncode})")
     with open(tmp_out) as f:
         return json.load(f)
 
@@ -88,19 +107,34 @@ def time_to_objective(run: dict, target: float):
 
 
 def summarize(run: dict) -> dict:
+    own = sum(p["own_updates"] for p in run["processes"])
+    trace = merged_trace(run)
+    drop = (trace[0]["objective"] - run["final_objective"]) if trace \
+        else None
     return {
         "wall_s": run["wall_s"],
         "final_objective": run["final_objective"],
         "total_updates": run["total_updates"],
         "total_comm_events": run["total_comm_events"],
         "max_staleness": run["max_staleness"],
+        "max_view_lag": run.get("max_view_lag", run["max_staleness"]),
+        "mid_round_ingested": run.get("mid_round_ingested", 0),
         "digest": run["digest"],
+        # per-update efficiency: objective progress bought per local
+        # update, and raw update throughput
+        "updates_per_s": round(own / run["wall_s"], 2),
+        "objective_drop_per_update": (
+            None if drop is None else drop / max(own, 1)),
         "per_process": [
             {"proc": p["proc"], "speed": p["speed"],
              "local_steps": p["local_steps"],
              "own_updates": p["own_updates"],
              "comm_events": p["comm_events"],
-             "gate_wait_s": p["gate_wait_s"], "wall_s": p["wall_s"]}
+             "gate_wait_s": p["gate_wait_s"],
+             "ingest_wait_s": p.get("ingest_wait_s", 0.0),
+             "update_ema_s": p.get("update_ema_s", 0.0),
+             "speed_buckets": p.get("speed_buckets", []),
+             "wall_s": p["wall_s"]}
             for p in run["processes"]],
     }
 
@@ -109,7 +143,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--check", action="store_true")
-    ap.add_argument("--processes", type=int, default=2)
+    ap.add_argument("--processes", type=int, default=4)
     ap.add_argument("--agents", type=int, default=8)
     ap.add_argument("--walks", type=int, default=2)
     ap.add_argument("--subsample", type=int, default=1024)
@@ -118,6 +152,7 @@ def main():
     ap.add_argument("--max-delay", type=int, default=4)
     ap.add_argument("--straggle-factor", type=float, default=3.0)
     ap.add_argument("--min-update-ms", type=float, default=None)
+    ap.add_argument("--rate-rounds", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--timeout", type=int, default=600)
     ap.add_argument("--out", default=os.path.join(ROOT,
@@ -126,21 +161,31 @@ def main():
     if args.rounds is None:
         args.rounds = 12 if args.quick else 40
     if args.min_update_ms is None:
+        # 10ms/30ms floors land mid-bucket on the default sqrt(2) grid
+        # (buckets 7 and 10, ~30% boundary margins), so the measured
+        # arm's agreed vector is stable across repeats
         args.min_update_ms = 10.0 if args.quick else 20.0
+    if args.rate_rounds is None:
+        args.rate_rounds = max(2, args.rounds // 3)
 
+    arms = {}
     with tempfile.TemporaryDirectory() as td:
-        print(f"== lockstep arm (max_delay=0, local_steps=1, "
-              f"straggler 1:{args.straggle_factor}x) ==")
-        lockstep = run_arm(args, "lockstep", os.path.join(td, "lock.json"))
-        print(f"== async arm (max_delay={args.max_delay}, "
-              f"local_steps={args.local_steps}, adaptive) ==")
-        async_a = run_arm(args, "async", os.path.join(td, "async_a.json"))
-        print("== async arm, repeat (digest reproducibility) ==")
-        async_b = run_arm(args, "async", os.path.join(td, "async_b.json"))
+        for arm in ARM_FLAGS:
+            runs = {}
+            for transport in ("jax", "file"):
+                print(f"== {arm} arm ({transport} transport) ==")
+                runs[transport] = run_arm(
+                    args, arm, transport,
+                    os.path.join(td, f"{arm}-{transport}.json"))
+            if arm in ("async+mid", "async+mid+measured"):
+                print(f"== {arm} arm, repeat (digest reproducibility) ==")
+                runs["repeat"] = run_arm(
+                    args, arm, "jax",
+                    os.path.join(td, f"{arm}-repeat.json"))
+            arms[arm] = runs
 
-    target = lockstep["final_objective"]
-    t_hit = time_to_objective(async_a, target)
-    speedup = (lockstep["wall_s"] / t_hit) if t_hit else None
+    target = arms["lockstep"]["jax"]["final_objective"]
+    lock_wall = arms["lockstep"]["jax"]["wall_s"]
     payload = {
         "benchmark": "async_bcd",
         "config": {
@@ -150,36 +195,57 @@ def main():
             "max_delay": args.max_delay,
             "straggle_factor": args.straggle_factor,
             "min_update_ms": args.min_update_ms,
+            "rate_rounds": args.rate_rounds,
             "seed": args.seed, "quick": args.quick,
         },
-        "lockstep": summarize(lockstep),
-        "async": summarize(async_a),
-        "async_repeat_digest": async_b["digest"],
-        "digest_reproducible": async_a["digest"] == async_b["digest"],
         "target_objective": target,
-        "async_time_to_target_s": t_hit,
-        "speedup_vs_lockstep": speedup,
+        "arms": {},
     }
+    for arm, runs in arms.items():
+        t_hit = time_to_objective(runs["jax"], target)
+        entry = {
+            "jax": summarize(runs["jax"]),
+            "file_digest": runs["file"]["digest"],
+            "transport_independent":
+                runs["file"]["digest"] == runs["jax"]["digest"],
+            "time_to_lockstep_objective_s": t_hit,
+            "speedup_vs_lockstep":
+                (lock_wall / t_hit) if t_hit else None,
+        }
+        if "repeat" in runs:
+            entry["repeat_digest"] = runs["repeat"]["digest"]
+            entry["digest_reproducible"] = (
+                runs["repeat"]["digest"] == runs["jax"]["digest"])
+        payload["arms"][arm] = entry
+
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"\nwrote {args.out}")
-    print(f"lockstep: wall {lockstep['wall_s']:.2f}s, "
-          f"final objective {target:.6f}, "
-          f"{lockstep['total_comm_events']} comm events")
-    print(f"async:    wall {async_a['wall_s']:.2f}s, "
-          f"target hit at {t_hit if t_hit is None else round(t_hit, 2)}s, "
-          f"{async_a['total_comm_events']} comm events, "
-          f"max staleness {async_a['max_staleness']}")
-    print(f"speedup to lockstep-final objective: "
-          f"{speedup if speedup is None else round(speedup, 2)}x; "
-          f"digest reproducible: {payload['digest_reproducible']}")
+    for arm, entry in payload["arms"].items():
+        s = entry["jax"]
+        spd = entry["speedup_vs_lockstep"]
+        print(f"{arm:>20}: wall {s['wall_s']:.2f}s, "
+              f"final {s['final_objective']:.6f}, "
+              f"{s['updates_per_s']} up/s,"
+              f" speedup {spd if spd is None else round(spd, 2)}x,"
+              f" staleness {s['max_staleness']},"
+              f" transport-independent {entry['transport_independent']}")
 
     if args.check:
-        assert payload["digest_reproducible"], (
-            async_a["digest"], async_b["digest"])
-        assert t_hit is not None, "async never reached lockstep objective"
-        assert speedup > 1.0, (
-            f"async no faster than lockstep ({speedup:.2f}x)")
+        for arm, entry in payload["arms"].items():
+            assert entry["transport_independent"], (
+                arm, entry["jax"]["digest"], entry["file_digest"])
+            assert entry.get("digest_reproducible", True), arm
+            if arm != "lockstep":
+                s = entry["jax"]
+                assert s["max_staleness"] <= args.max_delay, (arm, s)
+                assert s["max_view_lag"] <= args.max_delay, (arm, s)
+                assert entry["time_to_lockstep_objective_s"] is not None, (
+                    f"{arm} never reached lockstep objective")
+        fast = payload["arms"]["async"]["speedup_vs_lockstep"]
+        assert fast > 1.0, f"async no faster than lockstep ({fast:.2f}x)"
+        mid = payload["arms"]["async+mid"]["speedup_vs_lockstep"]
+        assert mid >= 1.2, f"async+mid below 1.2x ({mid:.2f}x)"
         print("CHECK OK")
 
 

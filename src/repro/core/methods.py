@@ -29,6 +29,12 @@ class MethodState:
     tokens: np.ndarray        # [M, p] token values z_m
     zhat: Optional[np.ndarray] = None   # [N, M, p] local copies (API-BCD)
     iteration: int = 0
+    # staleness accounting: how many updates consumed an explicitly
+    # supplied (possibly-stale) token_view rather than the in-state
+    # tokens.  Telemetry only — it must never feed back into numerics,
+    # so zero-delay views stay bitwise-identical to the default entry
+    # points (property-swept in tests/test_async_trainer.py).
+    view_updates: int = 0
 
     def copy(self) -> "MethodState":
         return MethodState(
@@ -36,6 +42,7 @@ class MethodState:
             tokens=self.tokens.copy(),
             zhat=None if self.zhat is None else self.zhat.copy(),
             iteration=self.iteration,
+            view_updates=self.view_updates,
         )
 
 
@@ -149,7 +156,10 @@ class APIBCD(IncrementalMethod):
         ``state.tokens`` is bitwise-equivalent to the default."""
         n = self.problem.num_agents
         s = state.copy()
-        view = s.tokens if token_view is None else np.asarray(token_view)
+        view = s.tokens
+        if token_view is not None:
+            view = np.asarray(token_view)
+            s.view_updates += 1
         s.zhat[agent, walk] = view[walk]                # step 3: receive token
         z_sum = s.zhat[agent].sum(axis=0)
         x_old = s.xs[agent].copy()
@@ -174,7 +184,10 @@ class APIBCD(IncrementalMethod):
         """
         n = self.problem.num_agents
         s = state.copy()
-        view = s.tokens if token_view is None else np.asarray(token_view)
+        view = s.tokens
+        if token_view is not None:
+            view = np.asarray(token_view)
+            s.view_updates += 1
         s.zhat[:] = view[None, :, :]
         z_sum = view.sum(axis=0)
         x_old = s.xs[agent].copy()
@@ -218,7 +231,10 @@ class GAPIBCD(IncrementalMethod):
         possibly-stale received token values, default zero-delay)."""
         n, m = self.problem.num_agents, self.num_walks
         s = state.copy()
-        view = s.tokens if token_view is None else np.asarray(token_view)
+        view = s.tokens
+        if token_view is not None:
+            view = np.asarray(token_view)
+            s.view_updates += 1
         s.zhat[agent, walk] = view[walk]
         z_sum = s.zhat[agent].sum(axis=0)
         x_old = s.xs[agent].copy()
@@ -236,7 +252,10 @@ class GAPIBCD(IncrementalMethod):
         ``token_view`` as in `APIBCD.update_fresh`."""
         n, m = self.problem.num_agents, self.num_walks
         s = state.copy()
-        view = s.tokens if token_view is None else np.asarray(token_view)
+        view = s.tokens
+        if token_view is not None:
+            view = np.asarray(token_view)
+            s.view_updates += 1
         s.zhat[:] = view[None, :, :]
         z_sum = view.sum(axis=0)
         x_old = s.xs[agent].copy()

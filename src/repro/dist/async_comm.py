@@ -30,7 +30,10 @@ import pickle
 import tempfile
 import threading
 import time
+import zlib
 from typing import Any
+
+import numpy as np
 
 
 class KVTimeout(TimeoutError):
@@ -54,7 +57,12 @@ class DictKV:
 
     def set(self, key: str, value: bytes) -> None:
         with self._cond:
-            assert key not in self._data, f"duplicate key {key}"
+            # write-once keys: a replayed set must carry the identical
+            # bytes (chaos tests replay publishes; the file transport
+            # tolerates this the same way — last atomic rename wins,
+            # with equal content)
+            assert self._data.get(key, value) == bytes(value), \
+                f"conflicting duplicate key {key}"
             self._data[key] = bytes(value)
             self._cond.notify_all()
 
@@ -149,3 +157,71 @@ class JaxCoordKV:
                 timeout_s: float) -> None:
         del num_procs, proc    # the coordinator knows the process set
         self._client.wait_at_barrier(name, int(timeout_s * 1000))
+
+
+class ChaosKV:
+    """Fault-injection wrapper for any KV transport (tests only).
+
+    Models the network misbehaviour a write-once KV protocol must
+    absorb without moving the digest:
+
+      * **latency** — each publish is delivered to the inner KV after a
+        per-key delay drawn from a *key-seeded* RNG, so delivery order
+        across keys is scrambled deterministically per seed;
+      * **reordering** — falls out of per-key latency: a later ``set``
+        can land before an earlier one;
+      * **duplicate replays** — with probability ``dup_prob`` the same
+        bytes are published a second time after a further delay
+        (tolerated because keys are write-once: `DictKV.set` asserts
+        byte-equality, `FileKV` re-renames identical content).
+
+    Delivery is guaranteed (every timer fires), so blocking gets always
+    terminate provided ``timeout_s`` exceeds ``max_latency_s``.  The
+    RNG is seeded from ``(seed, crc32(key))`` — deterministic per
+    (seed, key), independent of wall clock and of call interleaving.
+    """
+
+    def __init__(self, inner, seed: int = 0, max_latency_s: float = 0.01,
+                 dup_prob: float = 0.25):
+        self.inner = inner
+        self.seed = seed
+        self.max_latency_s = max_latency_s
+        self.dup_prob = dup_prob
+        self._timers = []
+        self._lock = threading.Lock()
+
+    def _rng(self, key: str):
+        return np.random.default_rng(
+            (self.seed, zlib.crc32(key.encode("utf-8"))))
+
+    def set(self, key: str, value: bytes) -> None:
+        rng = self._rng(key)
+        delay = float(rng.uniform(0.0, self.max_latency_s))
+        timers = [threading.Timer(delay, self.inner.set, (key, value))]
+        if float(rng.random()) < self.dup_prob:
+            extra = float(rng.uniform(0.0, self.max_latency_s))
+            timers.append(threading.Timer(
+                delay + extra, self.inner.set, (key, value)))
+        with self._lock:
+            self._timers += timers
+        for t in timers:
+            t.daemon = True
+            t.start()
+
+    def get(self, key: str, timeout_s: float) -> bytes:
+        return self.inner.get(key, timeout_s)
+
+    def barrier(self, name: str, num_procs: int, proc: int,
+                timeout_s: float) -> None:
+        # built from our own set/get so rendezvous traffic rides the
+        # same delayed/duplicated delivery path as delta publishes
+        self.set(f"barrier/{name}/{proc}", b"1")
+        for q in range(num_procs):
+            self.get(f"barrier/{name}/{q}", timeout_s)
+
+    def drain(self) -> None:
+        """Join all in-flight deliveries (call before final asserts)."""
+        with self._lock:
+            timers, self._timers = self._timers, []
+        for t in timers:
+            t.join()

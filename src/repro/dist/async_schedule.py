@@ -37,10 +37,31 @@ between two global syncs a fast process takes proportionally more
 local walks, and a straggler syncs after proportionally fewer instead
 of stalling the fleet; the staleness gate then stays open and each
 process contributes updates at its native rate.
+
+**Mid-round ingestion points** (DIGEST-style early application of
+stale information, arXiv 2307.07652 / 2305.xxxx): each event carries
+``ingest_cursors`` — for every local step j, the global-order prefix
+bound a worker may apply *before* executing step j.  The bound is pure
+virtual time: events completed by the step's virtual start, capped at
+the first event of the worker's *current* round (a round-r worker may
+see everything through round r-1, never same-round peers — which is
+what makes ``max_delay=0`` + mid-round exactly textbook BSP, every
+round computed against the complete previous round).  Because bounds
+are computed from the schedule alone, every process ingests the same
+prefix at the same points: staleness shrinks, digests don't move.
+
+**Measured-speed buckets**: `quantize_speed` / `bucket_speeds` turn an
+EMA of *observed* per-update wall time into a small integer bucket on
+a geometric grid.  Raw timings never cross the determinism boundary —
+each process publishes only its bucket index, every process reads the
+same agreed bucket vector at a rate-sync barrier, and the next epoch's
+schedule is rebuilt identically everywhere from those integers.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
+import math
 from typing import List, Optional, Sequence, Tuple
 
 
@@ -55,6 +76,12 @@ class SyncEvent:
     t_virtual: float    # virtual completion time (determines the order)
     staleness: int      # rounds ahead of the slowest peer at round start
     gated: bool         # True if the staleness gate delayed the start
+    # per-local-step mid-round ingestion: before executing step j the
+    # worker may apply global events [0, ingest_cursors[j]); view_lags[j]
+    # is the view's age in rounds at that point (<= max_delay, proven by
+    # the gate — see build_schedule)
+    ingest_cursors: Tuple[int, ...] = ()
+    view_lags: Tuple[int, ...] = ()
 
 
 def agent_shard(num_agents: int, num_procs: int, proc: int) -> Tuple[int, int]:
@@ -144,9 +171,100 @@ def build_schedule(
             events.append((t_end[p][r], p, r, steps[p],
                            max(0, (r - 1) - slowest), gated[p][r]))
     events.sort(key=lambda e: (e[0], e[1]))
-    return [SyncEvent(index=i, proc=p, round=r, num_updates=n,
-                      t_virtual=t, staleness=st, gated=g)
-            for i, (t, p, r, n, st, g) in enumerate(events)]
+
+    # ---- mid-round ingestion points -------------------------------------
+    # Before step j of (p, r) the worker may apply the global prefix
+    # [0, bound_j): every event completed by the step's virtual start,
+    # capped at the first event of round >= r.  The cap is what keeps
+    # max_delay=0 exactly BSP (a round-r worker never sees same-round
+    # peers mid-round); the SSP gate guarantees every peer's rounds
+    # <= r-1-max_delay sort before any round-r event, so the capped
+    # prefix still contains them and the view lag stays <= max_delay.
+    ts = [e[0] for e in events]
+    # first_ge[r]: first global index whose event is of round >= r
+    first_ge = [len(events)] * (rounds + 2)
+    for i, (_, _, r, _, _, _) in enumerate(events):
+        first_ge[r] = min(first_ge[r], i)
+    for r in range(rounds, 0, -1):
+        first_ge[r] = min(first_ge[r], first_ge[r + 1])
+    # cum[q][i]: how many of q's events sit in the global prefix [0, i)
+    cum = [[0] * (len(events) + 1) for _ in range(num_procs)]
+    for i, (_, p, _, _, _, _) in enumerate(events):
+        for q in range(num_procs):
+            cum[q][i + 1] = cum[q][i] + (1 if q == p else 0)
+    index_of = {(p, r): i for i, (_, p, r, _, _, _) in enumerate(events)}
+
+    out = []
+    for i, (t, p, r, n, st, g) in enumerate(events):
+        cursors, lags = [], []
+        sync_cursor = index_of[(p, r - 1)] + 1 if r >= 2 else 0
+        for j in range(n):
+            t_j = t_begin[p][r] + j * speeds[p]
+            bound = min(bisect.bisect_right(ts, t_j), first_ge[r])
+            cursors.append(bound)
+            prefix = max(bound, sync_cursor)
+            if num_procs > 1:
+                behind = min(cum[q][prefix]
+                             for q in range(num_procs) if q != p)
+                lags.append(max(0, (r - 1) - behind))
+            else:
+                lags.append(0)
+        out.append(SyncEvent(
+            index=i, proc=p, round=r, num_updates=n, t_virtual=t,
+            staleness=st, gated=g, ingest_cursors=tuple(cursors),
+            view_lags=tuple(lags)))
+    return out
+
+
+class WalkSequence:
+    """Stateful (agent, walk) activation stream for one process.
+
+    Walks round-robin (update j drives walk ``j % num_walks``), and each
+    walk visits the process's agent shard in ring order from evenly
+    spread start offsets — for ``num_procs == 1`` this is bit-for-bit
+    the interleaving of `repro.core.driver.run_serial` with
+    `CyclicWalk`s.  ``kind="random"`` draws the next agent uniformly
+    from the shard instead (seeded per (seed, proc): deterministic, but
+    exercising irregular visit patterns).
+
+    Statefulness matters for measured-speed runs: per-epoch step counts
+    are only known once the fleet agrees on speed buckets, so the
+    worker pulls activations incrementally with `take` — the stream is
+    a pure function of (config, how many steps were taken), never of
+    when they were taken.
+    """
+
+    def __init__(self, num_agents: int, num_procs: int, proc: int,
+                 num_walks: int, kind: str = "cyclic", seed: int = 0):
+        import numpy as np
+
+        lo, hi = agent_shard(num_agents, num_procs, proc)
+        self._lo, self._width = lo, hi - lo
+        assert self._width >= 1, (
+            f"process {proc} owns no agents "
+            f"({num_agents} agents, {num_procs} procs)")
+        assert kind in ("cyclic", "random"), kind
+        self._kind = kind
+        self._num_walks = num_walks
+        self._rng = np.random.default_rng((seed, proc))
+        self._pos = [lo + (w * self._width) // num_walks
+                     for w in range(num_walks)]
+        self._step = 0
+
+    def take(self, n: int) -> List[Tuple[int, int]]:
+        out = []
+        for _ in range(n):
+            w = self._step % self._num_walks
+            agent = self._pos[w]
+            if self._kind == "cyclic":
+                self._pos[w] = self._lo + (
+                    (self._pos[w] - self._lo + 1) % self._width)
+            else:
+                self._pos[w] = self._lo + int(
+                    self._rng.integers(0, self._width))
+            out.append((agent, w))
+            self._step += 1
+        return out
 
 
 def walk_sequence(
@@ -158,32 +276,52 @@ def walk_sequence(
     kind: str = "cyclic",
     seed: int = 0,
 ) -> List[Tuple[int, int]]:
-    """The (agent, walk) activation sequence for one process.
+    """Fixed-length wrapper over `WalkSequence` (see its docstring)."""
+    return WalkSequence(num_agents, num_procs, proc, num_walks,
+                        kind=kind, seed=seed).take(num_steps)
 
-    Walks round-robin (update j drives walk ``j % num_walks``), and each
-    walk visits the process's agent shard in ring order from evenly
-    spread start offsets — for ``num_procs == 1`` this is bit-for-bit
-    the interleaving of `repro.core.driver.run_serial` with
-    `CyclicWalk`s.  ``kind="random"`` draws the next agent uniformly
-    from the shard instead (seeded per (seed, proc): deterministic, but
-    exercising irregular visit patterns).
+
+# ---------------------------------------------------------------------------
+# measured-speed buckets (the determinism boundary for wall-clock input)
+# ---------------------------------------------------------------------------
+
+def quantize_speed(ema_s: float, quantum_s: float = 1e-3,
+                   base: float = 2.0 ** 0.5) -> int:
+    """Quantize a measured per-update wall time onto a geometric grid.
+
+    Returns the integer bucket index ``round(log_base(ema / quantum))``
+    (floored at 0).  This is the ONLY thing a process may publish about
+    its measured speed: raw wall times are noisy per repeat and
+    per process, but a 3x straggler lands buckets apart from its peers
+    on any run, so the agreed bucket vector — and therefore the rebuilt
+    schedule and the digest — is stable across seeded repeats.
     """
-    import numpy as np
+    assert quantum_s > 0 and base > 1.0
+    if ema_s <= quantum_s:
+        return 0
+    return max(0, int(round(math.log(ema_s / quantum_s) / math.log(base))))
 
-    lo, hi = agent_shard(num_agents, num_procs, proc)
-    width = hi - lo
-    assert width >= 1, f"process {proc} owns no agents ({num_agents} agents, {num_procs} procs)"
-    rng = np.random.default_rng((seed, proc))
-    pos = [lo + (w * width) // num_walks for w in range(num_walks)]
-    seq = []
-    for j in range(num_steps):
-        w = j % num_walks
-        agent = pos[w]
-        if kind == "cyclic":
-            pos[w] = lo + ((pos[w] - lo + 1) % width)
-        elif kind == "random":
-            pos[w] = lo + int(rng.integers(0, width))
-        else:
-            raise ValueError(kind)
-        seq.append((agent, w))
-    return seq
+
+def bucket_speeds(buckets: Sequence[int],
+                  base: float = 2.0 ** 0.5) -> List[float]:
+    """Fleet-relative speed multipliers from an agreed bucket vector.
+
+    The slowest bucket maps to the largest multiplier and the fastest
+    to 1.0: ``speed_p = base ** (bucket_p - min_q bucket_q)``.  Pure
+    function of the integer vector — every process computes the same
+    floats, so the per-epoch `build_schedule` inputs agree bitwise.
+    """
+    lo = min(buckets)
+    return [float(base ** (b - lo)) for b in buckets]
+
+
+def epoch_spans(rounds: int, rate_rounds: Optional[int]) -> List[Tuple[int, int]]:
+    """Split ``rounds`` into rate-sync epochs of ``rate_rounds`` each.
+
+    Returns ``(first_global_round - 1, num_rounds)`` offsets; a
+    ``None``/0 ``rate_rounds`` (declared-speed mode) is one epoch.
+    """
+    if not rate_rounds or rate_rounds >= rounds:
+        return [(0, rounds)]
+    return [(r0, min(rate_rounds, rounds - r0))
+            for r0 in range(0, rounds, rate_rounds)]

@@ -15,7 +15,12 @@ Execution model (per process):
      (`MethodState.tokens` — the stale replica plus the process's own
      uncommunicated deltas).  Each activation is one Alg. 2 step
      (`repro.core.methods`); a straggler-injection hook pads every
-     update to ``min_update_s * speed``.
+     update to ``min_update_s * speed``.  With ``mid_round=True``,
+     *before each activation* the worker applies any peer deltas the
+     deterministic schedule places earlier than that step
+     (`SyncEvent.ingest_cursors`) — staleness shrinks between syncs
+     without the digest moving, because every process ingests the same
+     prefix at the same schedule-defined points.
   2. Publish the round's accumulated token delta (eq. 12b credits are
      additive, so lump deltas commute across processes) under
      ``delta/<proc>/<round>``.
@@ -25,8 +30,24 @@ Execution model (per process):
      bounded-staleness gate: the schedule places a process's round
      start no more than ``max_delay`` rounds ahead of the slowest peer,
      so a runner-ahead blocks here exactly when the gate requires.
-     ``max_delay=0`` degenerates to the synchronous lockstep superstep.
+     ``max_delay=0`` degenerates to the synchronous lockstep superstep
+     — and, with ``mid_round=True``, to *textbook* BSP (every round
+     computed against the complete previous round).
   4. Pull: reset the working view to the replica and continue.
+
+**Measured-speed adaptation** (``measured_speeds=True``): the run is
+split into epochs of ``rate_rounds`` rounds.  Each worker keeps an EMA
+of its *observed* per-update wall time — measured over the update
+segment only; mid-round KV waits are excluded via separate monotonic
+segments, so transport latency can never poison the rate signal — and
+at each epoch boundary publishes the `quantize_speed` bucket index of
+that EMA.  Every process blocks for the full bucket vector, computes
+the same `bucket_speeds` multipliers, and rebuilds the next epoch's
+schedule from them: adaptive ``local_steps`` now track how slow a
+process actually *is* rather than what ``--straggle`` declared.  Raw
+wall times never cross the determinism boundary — only agreed integer
+buckets do — so cross-process digests stay bitwise equal and seeded
+repeats agree whenever the (coarse, geometric) buckets reproduce.
 
 Every process applies the same lump deltas in the same order, so the
 shared-estimate replica — and therefore the run digest — is bitwise
@@ -34,7 +55,8 @@ identical across processes and across repeats of a seeded run, while
 wall-clock behaviour (the thing the paper's Fig.-style comparisons
 measure) remains genuinely asynchronous.  `launch/train_async.py`
 drives one worker per jax process; `benchmarks/bench_async_bcd.py`
-benchmarks lockstep vs async arms with an injected straggler.
+benchmarks lockstep vs async vs async+mid-round arms with an injected
+straggler.
 """
 from __future__ import annotations
 
@@ -50,7 +72,8 @@ from repro.core.methods import IncrementalMethod
 from repro.dist.async_comm import decode as _dec_blob
 from repro.dist.async_comm import encode as _enc_blob
 from repro.dist.async_schedule import (
-    agent_shard, build_schedule, walk_sequence)
+    WalkSequence, agent_shard, bucket_speeds, build_schedule, epoch_spans,
+    quantize_speed)
 from repro.utils.hotpath import hot_loop
 
 
@@ -67,6 +90,12 @@ class AsyncBCDConfig:
     max_delay: Optional[int] = 0     # staleness bound; None = unbounded
     adaptive: bool = False           # speed-adapted per-round step counts
     speeds: Sequence[float] = ()     # per-process cost multipliers
+    mid_round: bool = False          # apply peer deltas between local steps
+    measured_speeds: bool = False    # schedule from measured buckets
+    rate_rounds: int = 8             # rounds per measured-speed epoch
+    speed_ema: float = 0.5           # EMA history weight for update times
+    speed_quantum_s: float = 1e-3    # bucket grid unit (quantize_speed)
+    speed_bucket_base: float = 2.0 ** 0.5   # bucket grid ratio
     rule: str = "walk"               # "walk" (Alg. 2) | "fresh" (Thm 2 view)
     walk_kind: str = "cyclic"        # "cyclic" | "random"
     min_update_s: float = 0.0        # per-update duration floor (nominal)
@@ -77,6 +106,15 @@ class AsyncBCDConfig:
         s = list(self.speeds) or [1.0] * self.num_procs
         assert len(s) == self.num_procs, (s, self.num_procs)
         return [float(v) for v in s]
+
+    def schedule_speeds(self) -> List[float]:
+        """Speeds seeding the FIRST epoch's schedule.
+
+        Measured mode starts blind (all 1.0 — real stragglers are
+        discovered, not declared); declared mode uses ``speeds``."""
+        if self.measured_speeds:
+            return [1.0] * self.num_procs
+        return self.resolved_speeds()
 
 
 @dataclasses.dataclass
@@ -94,6 +132,13 @@ class AsyncResult:
     gate_wait_s: float
     wall_s: float
     max_staleness: int
+    mid_round_ingested: int = 0  # peer events applied between local steps
+    ingest_wait_s: float = 0.0   # KV wait inside mid-round ingestion
+    max_view_lag: int = 0        # worst view age at any ingestion point
+    update_ema_s: float = 0.0    # final per-update wall-time EMA
+    speed_buckets: List[List[int]] = dataclasses.field(default_factory=list)
+    rate_syncs: int = 0          # measured-speed agreement barriers hit
+    num_epochs: int = 1
 
 
 def consensus_estimate(tokens: np.ndarray, rule: str) -> np.ndarray:
@@ -118,15 +163,15 @@ class AsyncWorker:
         self.method = method
         self.proc = proc
         self.kv = kv
-        self.speeds = cfg.resolved_speeds()
+        self.speeds = cfg.resolved_speeds()   # physical (pad injection)
+        self.epochs = epoch_spans(
+            cfg.rounds, cfg.rate_rounds if cfg.measured_speeds else None)
+        # first epoch's schedule, exposed for introspection (callers read
+        # my_events[0].num_updates for the starting local-step count)
         self.events = build_schedule(
-            cfg.num_procs, cfg.rounds, cfg.local_steps, self.speeds,
-            cfg.max_delay, adaptive=cfg.adaptive)
+            cfg.num_procs, self.epochs[0][1], cfg.local_steps,
+            cfg.schedule_speeds(), cfg.max_delay, adaptive=cfg.adaptive)
         self.my_events = [e for e in self.events if e.proc == proc]
-        total_steps = sum(e.num_updates for e in self.my_events)
-        self.sequence = walk_sequence(
-            cfg.num_agents, cfg.num_procs, proc, cfg.num_walks,
-            total_steps, kind=cfg.walk_kind, seed=cfg.seed)
 
     # -- one local activation -------------------------------------------------
 
@@ -150,83 +195,159 @@ class AsyncWorker:
         # warm the jitted solver before the start barrier so compile
         # time never pollutes the wall-clock comparison (the result is
         # discarded; update() copies its input state)
-        agent0, walk0 = self.sequence[0]
+        agent0, walk0 = WalkSequence(
+            cfg.num_agents, cfg.num_procs, self.proc, cfg.num_walks,
+            kind=cfg.walk_kind, seed=cfg.seed).take(1)[0]
         self._apply_update(state, agent0, walk0)
 
         z_rep = state.tokens.copy()       # applied global prefix (replica)
         pulled = state.tokens.copy()      # view at last pull
-        cursor = 0                        # next global event to apply
-        step_iter = iter(self.sequence)
+        sequence = WalkSequence(
+            cfg.num_agents, cfg.num_procs, self.proc, cfg.num_walks,
+            kind=cfg.walk_kind, seed=cfg.seed)
+        sched_speeds = cfg.schedule_speeds()
         trace: List[dict] = []
         own_updates = applied_updates = 0
         comm_posts = comm_fetches = 0
-        gate_wait_s = 0.0
-        max_staleness = 0
+        gate_wait_s = ingest_wait_s = 0.0
+        max_staleness = max_view_lag = 0
+        mid_round_ingested = 0
+        update_ema_s = 0.0
+        speed_buckets: List[List[int]] = []
+        rate_syncs = 0
 
         self.kv.barrier("async-bcd-start", cfg.num_procs, self.proc,
                         cfg.comm_timeout_s)
         t0 = time.monotonic()
 
-        for ev in self.my_events:
-            for _ in range(ev.num_updates):
-                t_u = time.monotonic()
-                agent, walk = next(step_iter)
-                state = self._apply_update(state, agent, walk)
-                own_updates += 1
-                if floor_s > 0.0:
-                    pad = floor_s - (time.monotonic() - t_u)
-                    if pad > 0:
-                        time.sleep(pad)
+        for ei, (r0, _) in enumerate(self.epochs):
+            events = self.events if ei == 0 else build_schedule(
+                cfg.num_procs, self.epochs[ei][1], cfg.local_steps,
+                sched_speeds, cfg.max_delay, adaptive=cfg.adaptive)
+            cursor = 0                    # next epoch event to apply
 
-            # publish this round's block update (lump delta since pull)
-            delta = state.tokens - pulled
-            self.kv.set(self._delta_key(self.proc, ev.round), _enc(delta))
-            comm_posts += 1
+            for ev in events:
+                if ev.proc != self.proc:
+                    continue
+                rnd_g = r0 + ev.round     # globally unique delta round
+                steps = sequence.take(ev.num_updates)
+                for j, (agent, walk) in enumerate(steps):
+                    if cfg.mid_round:
+                        # mid-round ingestion: apply the schedule's
+                        # pre-step prefix.  The KV wait is its own
+                        # monotonic segment — it must never count
+                        # against update wall time (pad absorption) or
+                        # leak into the measured-speed EMA.
+                        t_ing = time.monotonic()
+                        bound = ev.ingest_cursors[j]
+                        while cursor < bound:
+                            e = events[cursor]
+                            assert e.proc != self.proc, (
+                                "own events apply at own syncs")
+                            d = _dec(self.kv.get(
+                                self._delta_key(e.proc, r0 + e.round),
+                                cfg.comm_timeout_s))
+                            comm_fetches += 1
+                            z_rep = z_rep + d
+                            pulled = pulled + d
+                            state.tokens = state.tokens + d
+                            applied_updates += e.num_updates
+                            mid_round_ingested += 1
+                            cursor += 1
+                        ingest_wait_s += time.monotonic() - t_ing
+                        max_view_lag = max(max_view_lag, ev.view_lags[j])
+                    t_u = time.monotonic()
+                    state = self._apply_update(state, agent, walk)
+                    own_updates += 1
+                    if floor_s > 0.0:
+                        pad = floor_s - (time.monotonic() - t_u)
+                        if pad > 0:
+                            time.sleep(pad)
+                    dur = time.monotonic() - t_u
+                    update_ema_s = dur if own_updates == 1 else (
+                        cfg.speed_ema * update_ema_s
+                        + (1.0 - cfg.speed_ema) * dur)
 
-            # staleness gate: apply every update ordered before (and
-            # including) this sync — blocking on stragglers as needed
-            t_gate = time.monotonic()
-            while cursor <= ev.index:
-                e = self.events[cursor]
-                if e.proc == self.proc:
-                    d = delta if e.round == ev.round else None
-                    assert d is not None, "own events apply in order"
-                else:
-                    d = _dec(self.kv.get(self._delta_key(e.proc, e.round),
-                                         cfg.comm_timeout_s))
-                    comm_fetches += 1
+                # publish this round's block update (lump delta since pull)
+                delta = state.tokens - pulled
+                self.kv.set(self._delta_key(self.proc, rnd_g), _enc(delta))
+                comm_posts += 1
+
+                # staleness gate: apply every update ordered before (and
+                # including) this sync — blocking on stragglers as needed
+                t_gate = time.monotonic()
+                while cursor <= ev.index:
+                    e = events[cursor]
+                    if e.proc == self.proc:
+                        d = delta if e.round == ev.round else None
+                        assert d is not None, "own events apply in order"
+                    else:
+                        d = _dec(self.kv.get(
+                            self._delta_key(e.proc, r0 + e.round),
+                            cfg.comm_timeout_s))
+                        comm_fetches += 1
+                    z_rep = z_rep + d
+                    applied_updates += e.num_updates
+                    cursor += 1
+                gate_wait_s += time.monotonic() - t_gate
+                max_staleness = max(max_staleness, ev.staleness)
+
+                # pull: working view becomes the canonical replica
+                state.tokens = z_rep.copy()
+                pulled = z_rep.copy()
+
+                trace.append({
+                    "event": ev.index, "round": rnd_g, "epoch": ei,
+                    "wall_s": time.monotonic() - t0,
+                    "own_updates": own_updates,
+                    "applied_updates": applied_updates,
+                    "comm_events": comm_posts + comm_fetches,
+                    "gate_wait_s": gate_wait_s,
+                    "ingest_wait_s": ingest_wait_s,
+                    "ingested": mid_round_ingested,
+                    "staleness": ev.staleness,
+                    "view_lag": max(ev.view_lags) if cfg.mid_round
+                    else ev.staleness,
+                    "gated": ev.gated,
+                    "update_ema_s": update_ema_s,
+                    "consensus": consensus_estimate(z_rep, cfg.rule),
+                })
+
+            # catch up on peers' trailing events so every process ends
+            # the epoch with the identical full-prefix replica (the
+            # digest bar; also the clean base the next epoch starts on)
+            while cursor < len(events):
+                e = events[cursor]
+                d = _dec(self.kv.get(
+                    self._delta_key(e.proc, r0 + e.round),
+                    cfg.comm_timeout_s))
+                comm_fetches += 1
                 z_rep = z_rep + d
                 applied_updates += e.num_updates
                 cursor += 1
-            gate_wait_s += time.monotonic() - t_gate
-            max_staleness = max(max_staleness, ev.staleness)
 
-            # pull: working view becomes the canonical replica
-            state.tokens = z_rep.copy()
-            pulled = z_rep.copy()
-
-            trace.append({
-                "event": ev.index, "round": ev.round,
-                "wall_s": time.monotonic() - t0,
-                "own_updates": own_updates,
-                "applied_updates": applied_updates,
-                "comm_events": comm_posts + comm_fetches,
-                "gate_wait_s": gate_wait_s,
-                "staleness": ev.staleness,
-                "gated": ev.gated,
-                "consensus": consensus_estimate(z_rep, cfg.rule),
-            })
-
-        # catch up on peers' trailing events so every process finishes
-        # with the identical full-run replica (the digest bar)
-        while cursor < len(self.events):
-            e = self.events[cursor]
-            d = _dec(self.kv.get(self._delta_key(e.proc, e.round),
-                                 cfg.comm_timeout_s))
-            comm_fetches += 1
-            z_rep = z_rep + d
-            applied_updates += e.num_updates
-            cursor += 1
+            if ei + 1 < len(self.epochs):
+                state.tokens = z_rep.copy()
+                pulled = z_rep.copy()
+                if cfg.measured_speeds:
+                    # rate sync: publish the quantized bucket of the
+                    # measured EMA, block for the full agreed vector,
+                    # and rebuild the next epoch's schedule from it.
+                    # Integers only — raw wall times stay process-local.
+                    bucket = quantize_speed(
+                        update_ema_s, cfg.speed_quantum_s,
+                        cfg.speed_bucket_base)
+                    self.kv.set(f"speed/{self.proc}/{ei}",
+                                _enc_blob(int(bucket)))
+                    comm_posts += 1
+                    agreed = [int(_dec_blob(self.kv.get(
+                        f"speed/{q}/{ei}", cfg.comm_timeout_s)))
+                        for q in range(cfg.num_procs)]
+                    comm_fetches += cfg.num_procs
+                    sched_speeds = bucket_speeds(
+                        agreed, cfg.speed_bucket_base)
+                    speed_buckets.append(agreed)
+                    rate_syncs += 1
         wall_s = time.monotonic() - t0
 
         # objective evaluation is post-hoc, off the clock: consensus
@@ -247,7 +368,11 @@ class AsyncWorker:
             agent_range=(lo, hi), own_updates=own_updates,
             applied_updates=applied_updates, comm_posts=comm_posts,
             comm_fetches=comm_fetches, gate_wait_s=gate_wait_s,
-            wall_s=wall_s, max_staleness=max_staleness)
+            wall_s=wall_s, max_staleness=max_staleness,
+            mid_round_ingested=mid_round_ingested,
+            ingest_wait_s=ingest_wait_s, max_view_lag=max_view_lag,
+            update_ema_s=update_ema_s, speed_buckets=speed_buckets,
+            rate_syncs=rate_syncs, num_epochs=len(self.epochs))
 
 
 def _enc(arr: np.ndarray) -> bytes:

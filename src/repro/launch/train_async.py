@@ -23,6 +23,15 @@ Asynchrony knobs:
   * ``--local-steps L`` / ``--adaptive`` — walk updates per sync;
     adaptive scales per-process counts by declared speed so stragglers
     sync at the fleet cadence instead of stalling it.
+  * ``--mid-round`` — apply peer deltas *between* local steps at the
+    schedule's deterministic ingestion points (staleness shrinks, the
+    digest doesn't move; ``--max-delay 0 --mid-round`` is textbook BSP).
+  * ``--measured-speeds`` / ``--rate-rounds`` — adapt from *measured*
+    per-update wall time instead of the declared ``--straggle`` vector:
+    every ``--rate-rounds`` rounds each process publishes the quantized
+    bucket of its update-time EMA, the fleet agrees on the bucket
+    vector through the KV, and the next epoch's schedule is rebuilt
+    from it (raw wall times never cross the determinism boundary).
   * ``--straggle p:f[,q:g]`` — straggler injection: process p's updates
     are padded to f× the nominal ``--min-update-ms`` duration.
 
@@ -67,6 +76,14 @@ def _build_parser():
                     help="staleness bound in rounds; -1 = unbounded")
     ap.add_argument("--adaptive", action="store_true",
                     help="speed-adapted per-round update counts")
+    ap.add_argument("--mid-round", action="store_true",
+                    help="apply peer deltas between local steps at the "
+                         "schedule's deterministic ingestion points")
+    ap.add_argument("--measured-speeds", action="store_true",
+                    help="adapt from measured update-time buckets agreed "
+                         "through the KV instead of --straggle")
+    ap.add_argument("--rate-rounds", type=int, default=8,
+                    help="rounds per rate-sync epoch (measured mode)")
     ap.add_argument("--straggle", default="",
                     help='per-process slowdowns, e.g. "1:3.0,2:1.5"')
     ap.add_argument("--min-update-ms", type=float, default=0.0,
@@ -136,7 +153,9 @@ def run_child(args) -> int:
         max_delay=None if args.max_delay < 0 else args.max_delay,
         adaptive=args.adaptive, speeds=tuple(speeds), rule=args.rule,
         walk_kind=args.walk_kind, min_update_s=args.min_update_ms * 1e-3,
-        seed=args.seed, comm_timeout_s=float(args.timeout))
+        seed=args.seed, comm_timeout_s=float(args.timeout),
+        mid_round=args.mid_round, measured_speeds=args.measured_speeds,
+        rate_rounds=args.rate_rounds)
 
     worker = AsyncWorker(cfg, method, pid, kv)
     res = worker.run()
@@ -152,6 +171,13 @@ def run_child(args) -> int:
         "max_staleness": res.max_staleness,
         "speed": speeds[pid],
         "local_steps": worker.my_events[0].num_updates,
+        "mid_round_ingested": res.mid_round_ingested,
+        "ingest_wait_s": round(res.ingest_wait_s, 6),
+        "max_view_lag": res.max_view_lag,
+        "update_ema_s": round(res.update_ema_s, 6),
+        "speed_buckets": res.speed_buckets,
+        "rate_syncs": res.rate_syncs,
+        "num_epochs": res.num_epochs,
     }
     kv.set(f"result/{pid}", encode(summary))
     kv.barrier("async-bcd-results", args.processes, pid,
@@ -162,9 +188,15 @@ def run_child(args) -> int:
                  for q in range(args.processes)]
         final_obj = procs[0]["trace"][-1]["objective"] \
             if procs[0]["trace"] else None
+        if args.max_delay == 0 and args.local_steps == 1 \
+                and not args.mid_round:
+            mode = "lockstep"
+        elif args.mid_round:
+            mode = "async+mid"
+        else:
+            mode = "async"
         payload = {
-            "mode": ("lockstep" if args.max_delay == 0
-                     and args.local_steps == 1 else "async"),
+            "mode": mode,
             "transport": args.transport,
             "num_processes": args.processes,
             "config": {
@@ -177,12 +209,18 @@ def run_child(args) -> int:
                 "straggle": args.straggle,
                 "min_update_ms": args.min_update_ms,
                 "walk_kind": args.walk_kind, "seed": args.seed,
+                "mid_round": args.mid_round,
+                "measured_speeds": args.measured_speeds,
+                "rate_rounds": args.rate_rounds,
             },
             "digest": res.digest,
             "wall_s": round(max(p["wall_s"] for p in procs), 6),
             "total_updates": procs[0]["applied_updates"],
             "total_comm_events": sum(p["comm_events"] for p in procs),
             "max_staleness": max(p["max_staleness"] for p in procs),
+            "max_view_lag": max(p["max_view_lag"] for p in procs),
+            "mid_round_ingested": sum(
+                p["mid_round_ingested"] for p in procs),
             "final_objective": final_obj,
             "processes": procs,
         }

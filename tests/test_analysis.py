@@ -408,6 +408,36 @@ def test_reintroducing_set_iteration_into_async_schedule_fails():
         f.rule for f in run_source(bad, path).active}
 
 
+def test_planting_wall_clock_into_ingestion_points_fails():
+    """The mid-round ingestion bounds are pure virtual time; computing
+    them from the wall clock would silently desynchronize the fleet's
+    prefixes.  A planted time.time() in the real ingestion code must
+    trip the nondeterminism rule."""
+    path = "src/repro/dist/async_schedule.py"
+    src = (ROOT / path).read_text()
+    assert not run_source(src, path).active
+    bad = src.replace(
+        "t_j = t_begin[p][r] + j * speeds[p]",
+        "t_j = t_begin[p][r] + j * speeds[p] + time.time() * 0", 1)
+    assert bad != src, "expected the ingestion-point computation to exist"
+    assert "nondeterminism-in-dist" in {
+        f.rule for f in run_source(bad, path).active}
+
+
+def test_planting_wall_clock_into_ingest_segment_fails():
+    """Same bar for the worker's timed ingestion segment: the monotonic
+    segment timers must stay monotonic (time.time() is banned across
+    all dist/async_* modules)."""
+    path = "src/repro/dist/async_trainer.py"
+    src = (ROOT / path).read_text()
+    assert not run_source(src, path).active
+    bad = src.replace("t_ing = time.monotonic()",
+                      "t_ing = time.time()", 1)
+    assert bad != src, "expected the ingestion wait segment to exist"
+    assert "nondeterminism-in-dist" in {
+        f.rule for f in run_source(bad, path).active}
+
+
 def test_breaking_a_real_kernel_contract_fails():
     path = "src/repro/kernels/flash_attention.py"
     src = (ROOT / path).read_text()

@@ -1,0 +1,149 @@
+"""Transport fault injection for the async API-BCD runtime.
+
+`ChaosKV` (repro.dist.async_comm) wraps any transport with seeded
+per-key latency, reordered delivery, and duplicate `set` replays.  The
+bar mirrored from the paging scarcity sweep (`tests/test_paging.py`):
+misbehaviour below the protocol — the write-once KV — must be
+*invisible* above it.  Worker digests stay bitwise-equal across
+processes, across repeats, and against a clean transport; blocking
+gets never deadlock (every delivery is a timer that fires, and runs
+are capped by `comm_timeout_s`, so a lost update raises `KVTimeout`
+instead of hanging).
+"""
+import numpy as np
+import pytest
+
+from proptest import property_sweep
+from repro.core.methods import APIBCD
+from repro.data import make_problem
+from repro.dist.async_comm import ChaosKV, DictKV, FileKV, KVTimeout
+from repro.dist.async_trainer import AsyncBCDConfig, run_threaded
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_problem("cpusmall", 6, seed=7, subsample=256)
+
+
+def _cfg(**kw):
+    base = dict(num_procs=3, num_agents=6, num_walks=2, rounds=6,
+                local_steps=2, max_delay=2, adaptive=True,
+                speeds=(1.0, 2.0, 1.0), comm_timeout_s=60.0)
+    base.update(kw)
+    return AsyncBCDConfig(**base)
+
+
+def _run(problem, cfg, kv=None):
+    methods = [APIBCD(problem, tau=1.0, num_walks=cfg.num_walks)
+               for _ in range(cfg.num_procs)]
+    return run_threaded(cfg, methods, kv=kv)
+
+
+# ---------------------------------------------------------------------------
+# ChaosKV mechanics
+# ---------------------------------------------------------------------------
+
+class _CountingKV(DictKV):
+    def __init__(self):
+        super().__init__()
+        self.sets = {}
+
+    def set(self, key, value):
+        self.sets[key] = self.sets.get(key, 0) + 1
+        super().set(key, value)
+
+
+def test_chaos_latency_and_duplicates_are_real():
+    """The injector genuinely delays and replays: with dup_prob=1 every
+    key is delivered twice, and gets still return the right bytes."""
+    inner = _CountingKV()
+    kv = ChaosKV(inner, seed=3, max_latency_s=0.005, dup_prob=1.0)
+    for i in range(8):
+        kv.set(f"k/{i}", f"v{i}".encode())
+    for i in range(8):
+        assert kv.get(f"k/{i}", 5.0) == f"v{i}".encode()
+    kv.drain()
+    assert all(n == 2 for n in inner.sets.values()), inner.sets
+
+
+def test_chaos_delivery_schedule_is_seeded():
+    """Per-key delays depend only on (seed, key): two injectors with the
+    same seed draw identical schedules, a different seed diverges."""
+    a = ChaosKV(DictKV(), seed=11)
+    b = ChaosKV(DictKV(), seed=11)
+    c = ChaosKV(DictKV(), seed=12)
+    draws = [tuple(float(kv._rng(f"delta/0/{r}").uniform(0.0, 1.0))
+                   for r in range(6)) for kv in (a, b, c)]
+    assert draws[0] == draws[1]
+    assert draws[0] != draws[2]
+
+
+def test_dictkv_tolerates_identical_replay_rejects_conflict():
+    kv = DictKV()
+    kv.set("delta/0/1", b"payload")
+    kv.set("delta/0/1", b"payload")          # replay: same bytes, fine
+    assert kv.get("delta/0/1", 1.0) == b"payload"
+    with pytest.raises(AssertionError):
+        kv.set("delta/0/1", b"different")    # conflicting write-once
+
+
+def test_chaos_lost_update_times_out_instead_of_hanging():
+    """A key nobody ever publishes raises KVTimeout at the deadline —
+    the no-deadlock guarantee is a *timeout*, not a hang."""
+    kv = ChaosKV(DictKV(), seed=0)
+    with pytest.raises(KVTimeout):
+        kv.get("delta/9/9", 0.05)
+
+
+# ---------------------------------------------------------------------------
+# digest discipline under chaos
+# ---------------------------------------------------------------------------
+
+@property_sweep(num_cases=4)
+def test_chaos_digests_match_clean_transport(rng):
+    """Seeded latency + reordering + replays over DictKV: every worker's
+    digest equals every other's, equals a repeat under the same chaos
+    seed, and equals the clean-transport run — the numerics never see
+    the transport."""
+    problem = make_problem("cpusmall", 6, seed=7, subsample=256)
+    seed = int(rng.integers(0, 1000))
+    cfg = _cfg(mid_round=bool(rng.integers(0, 2)))
+    clean = _run(problem, cfg)
+    runs = []
+    for _ in range(2):
+        kv = ChaosKV(DictKV(), seed=seed, max_latency_s=0.008,
+                     dup_prob=0.5)
+        res = _run(problem, cfg, kv=kv)
+        kv.drain()
+        runs.append(res)
+    digests = {r.digest for run in runs for r in run}
+    assert digests == {clean[0].digest}, (digests, clean[0].digest)
+    assert np.array_equal(runs[0][0].tokens, clean[0].tokens)
+
+
+def test_chaos_over_file_transport(problem, tmp_path):
+    """The same chaos layered over FileKV (atomic-rename, polling gets):
+    duplicate renames of identical content and delayed publishes leave
+    the digest untouched."""
+    cfg = _cfg(rounds=4, mid_round=True)
+    clean = _run(problem, cfg)
+    kv = ChaosKV(FileKV(str(tmp_path / "kv")), seed=5,
+                 max_latency_s=0.008, dup_prob=0.5)
+    res = _run(problem, cfg, kv=kv)
+    kv.drain()
+    assert {r.digest for r in res} == {clean[0].digest}
+
+
+def test_chaos_measured_speeds_rate_sync_survives(problem):
+    """The measured-speed rendezvous keys (speed/<p>/<epoch>) ride the
+    same delayed/duplicated path; the agreed bucket vectors — and the
+    digest — still match across workers."""
+    cfg = _cfg(rounds=8, mid_round=True, measured_speeds=True,
+               rate_rounds=4, min_update_s=0.002)
+    kv = ChaosKV(DictKV(), seed=21, max_latency_s=0.005, dup_prob=0.5)
+    res = _run(problem, cfg, kv=kv)
+    kv.drain()
+    assert len({r.digest for r in res}) == 1
+    assert all(r.rate_syncs == 1 for r in res)
+    assert res[0].speed_buckets == res[1].speed_buckets \
+        == res[2].speed_buckets

@@ -15,7 +15,8 @@ from repro.core.graph import ring_graph
 from repro.core.methods import APIBCD, GAPIBCD
 from repro.data import make_problem
 from repro.dist.async_schedule import (
-    agent_shard, build_schedule, local_steps, walk_sequence)
+    WalkSequence, agent_shard, bucket_speeds, build_schedule, epoch_spans,
+    local_steps, quantize_speed, walk_sequence)
 from repro.dist.async_trainer import (
     AsyncBCDConfig, consensus_estimate, run_threaded)
 
@@ -109,6 +110,81 @@ def test_walk_sequence_random_stays_in_shard():
     assert seq != walk_sequence(10, 3, 1, 2, 50, kind="random", seed=5)
 
 
+def test_walk_sequence_stateful_matches_batch():
+    """`WalkSequence.take` in chunks reproduces the one-shot sequence —
+    the per-epoch loop resumes the walk exactly where it paused."""
+    for kind in ("cyclic", "random"):
+        ws = WalkSequence(9, 2, 1, 3, kind=kind, seed=6)
+        chunks = ws.take(4) + ws.take(1) + ws.take(7)
+        assert chunks == walk_sequence(9, 2, 1, 3, 12, kind=kind, seed=6)
+
+
+# ---------------------------------------------------------------------------
+# mid-round ingestion points (schedule level)
+# ---------------------------------------------------------------------------
+
+@property_sweep(num_cases=10)
+def test_schedule_ingestion_points_bounded(rng):
+    """For random fleets: per-step ingestion cursors are monotone
+    contiguous global-order prefixes, never reach into the event's own
+    round, and the view lag at EVERY ingestion point respects the
+    staleness bound."""
+    procs = int(rng.integers(2, 5))
+    delay = int(rng.integers(0, 4))
+    speeds = rng.uniform(0.5, 4.0, procs).tolist()
+    ev = build_schedule(procs, int(rng.integers(2, 12)),
+                        int(rng.integers(1, 6)), speeds, max_delay=delay,
+                        adaptive=bool(rng.integers(0, 2)))
+    for e in ev:
+        assert len(e.ingest_cursors) == e.num_updates == len(e.view_lags)
+        assert list(e.ingest_cursors) == sorted(e.ingest_cursors)
+        # prefixes never run past the event's own sync point, and every
+        # event inside an ingestion prefix is from an EARLIER round —
+        # a round-r worker never sees same-round peers mid-round
+        assert all(c <= e.index for c in e.ingest_cursors)
+        hi = max(e.ingest_cursors)
+        assert all(ev[i].round < e.round for i in range(hi))
+        assert all(lag <= delay for lag in e.view_lags), e
+
+
+def test_schedule_zero_delay_ingestion_is_complete_prev_round():
+    """max_delay=0: every step of round r ingests the FULL round r-1
+    prefix — the mid-round view is the BSP view at every step."""
+    ev = build_schedule(3, 5, 4, [1.0, 3.0, 2.0], max_delay=0,
+                        adaptive=True)
+    first_of_round = {}
+    for e in ev:
+        first_of_round.setdefault(e.round, e.index)
+    for e in ev:
+        assert all(c == first_of_round[e.round] for c in e.ingest_cursors)
+        assert all(lag == 0 for lag in e.view_lags)
+
+
+def test_speed_bucket_quantization():
+    """quantize_speed maps EMAs onto a geometric grid; bucket_speeds
+    turns an agreed vector into relative multipliers (min bucket = 1)."""
+    assert quantize_speed(0.0) == 0
+    assert quantize_speed(1e-3) == 0          # at the quantum
+    assert quantize_speed(4e-3, base=2.0) == 2
+    assert quantize_speed(16e-3, base=2.0) == 4
+    assert bucket_speeds([2, 4], base=2.0) == [1.0, 4.0]
+    assert bucket_speeds([3, 3], base=2.0) == [1.0, 1.0]
+    # √2 grid (default): 10ms vs 30ms land 3 buckets apart => ~2.8x
+    b = [quantize_speed(10e-3), quantize_speed(30e-3)]
+    s = bucket_speeds(b)
+    assert s[0] == 1.0 and 2.5 < s[1] < 3.2
+
+
+def test_epoch_spans_partition_rounds():
+    assert epoch_spans(12, None) == [(0, 12)]
+    assert epoch_spans(12, 0) == [(0, 12)]
+    assert epoch_spans(12, 20) == [(0, 12)]
+    assert epoch_spans(10, 4) == [(0, 4), (4, 4), (8, 2)]
+    spans = epoch_spans(23, 5)
+    assert sum(n for _, n in spans) == 23
+    assert [r0 for r0, _ in spans] == [0, 5, 10, 15, 20]
+
+
 # ---------------------------------------------------------------------------
 # staleness-aware method entry points (core/methods.py)
 # ---------------------------------------------------------------------------
@@ -143,6 +219,49 @@ def test_token_view_zero_delay_bitwise(rng):
         assert np.array_equal(x.tokens, y.tokens)
         assert np.array_equal(x.xs, y.xs)
         assert np.array_equal(x.zhat, y.zhat)
+    # staleness accounting: explicit views are counted, defaults aren't —
+    # and the counter is telemetry only, never part of the numerics
+    assert a.view_updates == fa.view_updates == 0
+    assert b.view_updates == fb.view_updates == 1
+
+
+@property_sweep(num_cases=4)
+def test_view_updates_counter_never_feeds_numerics(rng):
+    """Two states differing ONLY in `view_updates` produce bitwise
+    identical updates under every entry point and under mid-round-style
+    token mutation (the replica `+ d` path), for both rules — the
+    accounting can never perturb the digest."""
+    prob = make_problem("cpusmall", 4, seed=int(rng.integers(0, 100)),
+                        subsample=256)
+    m = int(rng.integers(1, 3))
+    method = (APIBCD(prob, tau=1.0, num_walks=m)
+              if rng.integers(0, 2) else
+              GAPIBCD(prob, tau=1.0, num_walks=m, rho=5.0))
+    state = method.init()
+    stale = state.tokens.copy()          # all-zeros: maximally stale
+    for j in range(3):
+        state = method.update(state, int(rng.integers(0, 4)), j % m,
+                              token_view=stale)
+    assert state.view_updates == 3
+    assert state.copy().view_updates == 3
+    twin = state.copy()
+    twin.view_updates = 0
+    # mid-round-style ingestion mutates tokens in place on both
+    d = rng.normal(size=state.tokens.shape)
+    state.tokens = state.tokens + d
+    twin.tokens = twin.tokens + d
+    agent = int(rng.integers(0, 4))
+    for call in (
+            lambda s: method.update(s, agent, 0),
+            lambda s: method.update(s, agent, 0, token_view=stale),
+            lambda s: method.update_fresh(s, agent),
+            lambda s: method.update_fresh(s, agent, token_view=stale)):
+        x, y = call(state), call(twin)
+        assert np.array_equal(x.tokens, y.tokens)
+        assert np.array_equal(x.xs, y.xs)
+        assert np.array_equal(x.zhat, y.zhat)
+        assert x.view_updates - state.view_updates \
+            == y.view_updates - twin.view_updates
 
 
 def test_token_view_stale_differs_but_converges_shape(small_problem):
@@ -242,22 +361,219 @@ def test_comm_counts_accounted(small_problem):
 
 
 # ---------------------------------------------------------------------------
+# mid-round ingestion (runtime level)
+# ---------------------------------------------------------------------------
+
+def _bsp_reference(cfg, methods):
+    """Textbook BSP: round r's deltas are all computed from the complete
+    round r-1 replica, then applied in the schedule's global event
+    order (float addition is non-associative, so application ORDER —
+    not just the delta set — must match the workers')."""
+    events = build_schedule(cfg.num_procs, cfg.rounds, cfg.local_steps,
+                            cfg.schedule_speeds(), 0,
+                            adaptive=cfg.adaptive)
+    seqs = [WalkSequence(cfg.num_agents, cfg.num_procs, p, cfg.num_walks,
+                         kind=cfg.walk_kind, seed=cfg.seed)
+            for p in range(cfg.num_procs)]
+    states = [m.init() for m in methods]
+    z = states[0].tokens.copy()
+    by_round = {}
+    for ev in events:
+        by_round.setdefault(ev.round, []).append(ev)
+    for rnd in sorted(by_round):
+        deltas = []
+        for ev in by_round[rnd]:       # schedule order within the round
+            st = states[ev.proc]
+            st.tokens = z.copy()
+            before = st.tokens.copy()
+            for agent, walk in seqs[ev.proc].take(ev.num_updates):
+                st = (methods[ev.proc].update(st, agent, walk)
+                      if cfg.rule == "walk"
+                      else methods[ev.proc].update_fresh(st, agent))
+            states[ev.proc] = st
+            deltas.append(st.tokens - before)
+        for d in deltas:
+            z = z + d
+    return z
+
+
+@property_sweep(num_cases=3)
+def test_mid_round_zero_delay_is_bsp_bitwise(rng):
+    """mid_round + max_delay=0 IS textbook BSP: final tokens are bitwise
+    those of a lockstep simulator, for random fleet shapes/speeds."""
+    procs = int(rng.integers(2, 4))
+    prob = make_problem("cpusmall", 2 * procs,
+                        seed=int(rng.integers(0, 100)), subsample=256)
+    cfg = AsyncBCDConfig(
+        num_procs=procs, num_agents=2 * procs, num_walks=2,
+        rounds=int(rng.integers(3, 7)),
+        local_steps=int(rng.integers(1, 4)), max_delay=0,
+        adaptive=bool(rng.integers(0, 2)),
+        speeds=tuple(rng.uniform(0.5, 3.0, procs).tolist()),
+        mid_round=True)
+    methods = [APIBCD(prob, tau=1.0, num_walks=2) for _ in range(procs)]
+    res = run_threaded(cfg, methods)
+    ref = _bsp_reference(
+        cfg, [APIBCD(prob, tau=1.0, num_walks=2) for _ in range(procs)])
+    assert len({r.digest for r in res}) == 1
+    assert np.array_equal(res[0].tokens, ref)
+    assert all(r.max_view_lag == 0 for r in res)
+
+
+def test_mid_round_single_process_matches_run_serial(small_problem):
+    """P=1 with ingestion enabled: there are no peers to ingest, and the
+    result stays bit-for-bit `run_serial`."""
+    m, rounds = 2, 15
+    cfg = AsyncBCDConfig(num_procs=1, num_agents=5, num_walks=m,
+                         rounds=rounds, mid_round=True)
+    res = run_threaded(
+        cfg, [APIBCD(small_problem, tau=1.0, num_walks=m)])[0]
+    ser = run_serial(APIBCD(small_problem, tau=1.0, num_walks=m),
+                     ring_graph(5), num_iterations=rounds)
+    assert np.array_equal(res.tokens, ser.tokens)
+    assert np.array_equal(res.xs_local, ser.xs)
+    assert res.mid_round_ingested == 0
+
+
+@property_sweep(num_cases=4)
+def test_mid_round_digest_and_lag_bound_sweep(rng):
+    """Randomized (P, speeds, max_delay, local_steps, seed) sweep:
+    mid-round digests agree across workers and repeats, the observed
+    view lag respects the bound at every ingestion point, and the
+    ingested deltas land in the update counts."""
+    procs = int(rng.integers(2, 4))
+    delay = int(rng.integers(0, 3))
+    prob = make_problem("cpusmall", 2 * procs,
+                        seed=int(rng.integers(0, 100)), subsample=256)
+    cfg = AsyncBCDConfig(
+        num_procs=procs, num_agents=2 * procs, num_walks=2,
+        rounds=int(rng.integers(3, 8)),
+        local_steps=int(rng.integers(1, 4)), max_delay=delay,
+        adaptive=True, speeds=tuple(rng.uniform(0.5, 3.0, procs)),
+        seed=int(rng.integers(0, 50)), mid_round=True)
+
+    def go():
+        return run_threaded(cfg, [APIBCD(prob, tau=1.0, num_walks=2)
+                                  for _ in range(procs)])
+    res, rep = go(), go()
+    assert len({r.digest for r in res + rep}) == 1
+    for r in res:
+        assert r.max_view_lag <= delay
+        assert r.max_staleness <= delay
+
+
+def test_mid_round_ingests_between_steps(small_problem):
+    """With a non-adaptive straggler the slow peer's old rounds complete
+    mid-round on the fast process — exactly when early application
+    pays: the mid arm really ingests between steps, stays internally
+    digest-consistent, and its updates compute against strictly fresher
+    views (the numerics differ from the sync-only arm BY DESIGN; the
+    digest bar is within-arm, across processes and repeats)."""
+    kw = dict(local_steps=3, max_delay=2, speeds=(1.0, 3.0))
+    _, plain = _threaded(small_problem, **kw)
+    _, mid = _threaded(small_problem, mid_round=True, **kw)
+    assert plain[0].digest == plain[1].digest
+    assert mid[0].digest == mid[1].digest
+    assert sum(r.mid_round_ingested for r in mid) > 0
+    assert all(r.mid_round_ingested == 0 for r in plain)
+    assert max(r.max_view_lag for r in mid) \
+        <= max(r.max_staleness for r in plain)
+
+
+# ---------------------------------------------------------------------------
+# measured-speed adaptation
+# ---------------------------------------------------------------------------
+
+def _measured_cfg(**kw):
+    # floors 4ms / 16ms on a base-2 grid land mid-bucket (2 and 4, each
+    # with a ±41% boundary margin), so thread-scheduling noise cannot
+    # flip the agreed vector between repeats
+    base = dict(num_procs=2, num_agents=5, num_walks=2, rounds=8,
+                local_steps=4, max_delay=2, adaptive=True,
+                speeds=(1.0, 4.0), min_update_s=0.004,
+                measured_speeds=True, rate_rounds=4,
+                speed_bucket_base=2.0)
+    base.update(kw)
+    return AsyncBCDConfig(**base)
+
+
+def test_measured_speeds_agree_and_reproduce(small_problem):
+    """Measured mode: the rate sync agrees on one bucket vector, the
+    straggler lands in a strictly higher bucket, and digests match
+    across workers AND across repeats (the bucket grid is the whole
+    determinism story)."""
+    cfg = _measured_cfg()
+
+    def go():
+        return run_threaded(cfg, [APIBCD(small_problem, tau=1.0,
+                                         num_walks=2) for _ in range(2)])
+    res, rep = go(), go()
+    assert len({r.digest for r in res + rep}) == 1
+    assert all(r.num_epochs == 2 and r.rate_syncs == 1 for r in res)
+    (buckets,) = res[0].speed_buckets
+    assert res[0].speed_buckets == res[1].speed_buckets \
+        == rep[0].speed_buckets
+    assert buckets[1] > buckets[0], buckets   # straggler discovered
+
+
+def test_measured_speeds_adapt_step_counts(small_problem):
+    """After the rate sync the rebuilt schedule batches fewer walks per
+    round on the discovered straggler — visible as a slower own-update
+    rate in its epoch-2 trace."""
+    cfg = _measured_cfg()
+    res = run_threaded(cfg, [APIBCD(small_problem, tau=1.0, num_walks=2)
+                             for _ in range(2)])
+
+    def epoch_steps(r, ei):
+        recs = [t for t in r.trace if t["epoch"] == ei]
+        prev = [t for t in r.trace if t["epoch"] < ei]
+        base = prev[-1]["own_updates"] if prev else 0
+        return recs[-1]["own_updates"] - base
+    # epoch 1 was blind (equal steps); epoch 2 adapts to measured buckets
+    assert epoch_steps(res[0], 0) == epoch_steps(res[1], 0)
+    assert epoch_steps(res[1], 1) < epoch_steps(res[0], 1)
+
+
+def test_measured_ema_not_poisoned_by_transport_latency(small_problem):
+    """Regression (gate-wait accounting): KV waits — sync gate AND
+    mid-round ingestion — are separate monotonic segments, so a slow
+    transport cannot inflate the update-time EMA and corrupt the speed
+    buckets.  Chaos latency (30ms) dwarfs the update floor (2/6ms);
+    the EMA must stay at floor scale."""
+    from repro.dist.async_comm import ChaosKV, DictKV
+    cfg = _measured_cfg(num_procs=2, speeds=(1.0, 3.0),
+                        min_update_s=0.002, mid_round=True,
+                        speed_bucket_base=2.0 ** 0.5)
+    kv = ChaosKV(DictKV(), seed=9, max_latency_s=0.03, dup_prob=0.3)
+    res = run_threaded(cfg, [APIBCD(small_problem, tau=1.0, num_walks=2)
+                             for _ in range(2)], kv=kv)
+    kv.drain()
+    assert len({r.digest for r in res}) == 1
+    for r, floor in zip(res, (0.002, 0.006)):
+        # transport latency stayed out of the EMA...
+        assert r.update_ema_s < 0.015, (r.proc, r.update_ema_s)
+        assert r.update_ema_s >= floor * 0.9
+    # ...while the run really did wait on the slow transport
+    assert any(r.gate_wait_s + r.ingest_wait_s > 0.02 for r in res)
+
+
+# ---------------------------------------------------------------------------
 # the real multi-process driver (subprocess; wired into CI)
 # ---------------------------------------------------------------------------
 
-def _run_train_async(tmp_path, extra):
+def _run_train_async(tmp_path, extra, processes=2):
     out = tmp_path / "run.json"
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src") + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
     res = subprocess.run(
         [sys.executable, "-m", "repro.launch.train_async",
-         "--processes", "2", "--agents", "6", "--walks", "2",
+         "--processes", str(processes), "--agents", "6", "--walks", "2",
          "--rounds", "6", "--subsample", "256",
          "--out", str(out), *extra],
         env=env, capture_output=True, text=True, timeout=600, cwd=ROOT)
     assert res.returncode == 0, res.stdout + res.stderr
-    assert res.stdout.count("ASYNC_BCD_OK") == 2, res.stdout
+    assert res.stdout.count("ASYNC_BCD_OK") == processes, res.stdout
     digests = [ln.split("digest=")[1] for ln in res.stdout.splitlines()
                if "ASYNC_BCD_OK" in ln]
     assert len(set(digests)) == 1, f"processes disagree: {digests}"
@@ -292,3 +608,35 @@ def test_two_process_lockstep_driver_file_transport(tmp_path):
     run = _run_train_async(tmp_path, ["--transport", "file"])
     assert run["mode"] == "lockstep"
     assert run["max_staleness"] == 0
+
+
+def test_four_process_mid_round_driver(tmp_path):
+    """4 real jax processes, mid-round ingestion, 3x straggler: all
+    four digests agree, the view lag respects the bound at every
+    ingestion point, and deltas really were applied between steps."""
+    run = _run_train_async(tmp_path, [
+        "--mid-round", "--local-steps", "3", "--max-delay", "2",
+        "--straggle", "1:3.0", "--min-update-ms", "1"], processes=4)
+    assert run["mode"] == "async+mid"
+    assert run["num_processes"] == 4
+    assert run["max_staleness"] <= 2
+    assert run["max_view_lag"] <= 2
+    assert run["mid_round_ingested"] > 0
+
+
+def test_four_process_measured_speeds_file_transport(tmp_path):
+    """4 processes over the file transport with measured-speed
+    adaptation: every process agrees on the same bucket vector at the
+    rate sync, the injected straggler lands in a higher bucket, and
+    digests stay bitwise equal."""
+    run = _run_train_async(tmp_path, [
+        "--transport", "file", "--measured-speeds", "--rate-rounds", "3",
+        "--adaptive", "--local-steps", "2", "--max-delay", "2",
+        "--straggle", "2:4.0", "--min-update-ms", "4"], processes=4)
+    assert run["mode"] == "async"
+    vectors = {tuple(map(tuple, p["speed_buckets"]))
+               for p in run["processes"]}
+    assert len(vectors) == 1, vectors
+    buckets = run["processes"][0]["speed_buckets"][0]
+    assert buckets[2] > min(buckets), buckets
+    assert all(p["rate_syncs"] == 1 for p in run["processes"])
