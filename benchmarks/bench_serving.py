@@ -20,6 +20,15 @@ a mixed-length workload, written to BENCH_serving.json.
     outputs are bitwise equal (they must be — preemption is
     semantically inert) and how many evictions recompute paid.
 
+--windowed adds the sliding-window ring arm: a long-generation workload
+served by a windowed (attn_window < capacity) model at EQUAL token
+memory — the arena spends its budget on 2 capacity-sized slots while
+the ring-paged pool fits a ceil(window/block_size)-block ring per
+request and admits 3x the concurrency.  Both runs are timed; --check
+additionally gates the paged outputs bitwise-equal to the arena
+reference and completed_all (the ring-paged path is an optimization,
+never a semantic change).
+
 Workload: all prompts share one length (so the wave scheduler batches
 maximally — the comparison isolates *scheduling*, not shapes), budgets
 interleave short and long generations.  Wave batching decodes each wave
@@ -227,6 +236,68 @@ def bench_scarce(model, params, cfg, args):
     }
 
 
+def bench_windowed(cfg, args):
+    """Sliding-window ring arm: long generations under a 16-token
+    attention window, arena vs ring-paged at equal token memory.
+
+    The arena must hold plen + budget positions per slot, so 128 tokens
+    of KV buy it 2 slots; the ring-paged pool spends the same 128
+    tokens (16 blocks of 8) on 2-block rings — one ring per request
+    plus the null block — and admits every request at once.  Outputs
+    must stay bitwise equal: the ring is a layout, not a policy."""
+    window, block_size = 16, 8
+    requests = 6 if args.quick else 10
+    plen, budget = 8, 56
+    cap = bucket_length(plen + budget)              # 64
+    arena_batch = 2
+    num_blocks = arena_batch * cap // block_size    # equal token memory
+    ring_blocks = -(-window // block_size)
+    paged_batch = min(requests, (num_blocks - 1) // ring_blocks)
+
+    model = build_model(cfg, window=window)
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = [(np.random.default_rng(200 + i).integers(
+        0, cfg.vocab_size, (plen,)), budget) for i in range(requests)]
+
+    def make_arena():
+        return Engine(model, params, max_batch=arena_batch, max_len=cap)
+
+    def make_paged():
+        return Engine(model, params, max_batch=paged_batch, max_len=cap,
+                      paged=True, block_size=block_size,
+                      num_blocks=num_blocks, prefill_chunk=8)
+
+    for make in (make_arena, make_paged):
+        warm = make()
+        warm.submit(reqs[0][0], max_new_tokens=2)
+        warm.run()
+
+    best = serve_best_each({"arena_window": make_arena,
+                            "ring_paged": make_paged},
+                           reqs, args.repeats)
+    arena, paged = best["arena_window"], best["ring_paged"]
+    out_a, out_p = arena.pop("_outputs"), paged.pop("_outputs")
+    for r in (arena, paged):
+        r["completed_all"] = (r["tokens"] == requests * budget
+                              and r["requests"] == requests)
+    return {
+        "workload": {"requests": requests, "prompt_len": plen,
+                     "budget": budget, "window": window,
+                     "block_size": block_size, "num_blocks": num_blocks,
+                     "slot_capacity": cap, "arena_batch": arena_batch,
+                     "paged_batch": paged_batch},
+        "arena_window": arena,
+        "ring_paged": paged,
+        "throughput_ratio": round(paged["throughput_tok_s"]
+                                  / arena["throughput_tok_s"], 2),
+        "p99_speedup": round(arena["latency_p99_s"]
+                             / paged["latency_p99_s"], 2),
+        "outputs_bitwise_equal": (
+            sorted(out_a) == sorted(out_p)
+            and all(np.array_equal(out_a[u], out_p[u]) for u in out_a)),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_serving.json")
@@ -242,6 +313,10 @@ def main():
     ap.add_argument("--paged", action="store_true",
                     help="add the paged-KV long-generation and "
                          "block-scarce preemption arms")
+    ap.add_argument("--windowed", action="store_true",
+                    help="add the sliding-window ring arm (arena vs "
+                         "ring-paged at equal token memory; --check "
+                         "gates bitwise-equal outputs + completed_all)")
     ap.add_argument("--preemption", choices=("recompute", "reserve"),
                     default="recompute",
                     help="admission policy for the long-generation arm "
@@ -296,6 +371,8 @@ def main():
         results["paged_long"] = bench_paged(model, params, cfg, args,
                                             max_len)
         results["paged_scarce"] = bench_scarce(model, params, cfg, args)
+    if args.windowed:
+        results["windowed_ring"] = bench_windowed(cfg, args)
     for k in ("wave", "continuous", "paged_long"):
         if k not in results:
             continue
@@ -314,6 +391,16 @@ def main():
         print(f"scarce recompute vs reserve: throughput "
               f"{sc['throughput_ratio']}x, p99 {sc['p99_speedup']}x, "
               f"outputs equal: {sc['outputs_bitwise_equal']}")
+    if args.windowed:
+        wr = results["windowed_ring"]
+        for arm in ("arena_window", "ring_paged"):
+            r = wr[arm]
+            print(f"{arm:11s}: {r['throughput_tok_s']:8.1f} tok/s   "
+                  f"p50 {r['latency_p50_s']:.3f}s   "
+                  f"p99 {r['latency_p99_s']:.3f}s")
+        print(f"ring-paged vs arena (window): throughput "
+              f"{wr['throughput_ratio']}x, p99 {wr['p99_speedup']}x, "
+              f"outputs equal: {wr['outputs_bitwise_equal']}")
 
     with open(args.out, "w") as f:
         json.dump(results, f, indent=1)
@@ -341,6 +428,16 @@ def main():
             print("FAIL: on the block-scarce workload, recompute must "
                   "complete all requests with outputs bitwise equal to "
                   "reserve at strictly higher throughput")
+            sys.exit(1)
+    if args.check and args.windowed:
+        wr = results["windowed_ring"]
+        ok = (wr["arena_window"]["completed_all"]
+              and wr["ring_paged"]["completed_all"]
+              and wr["outputs_bitwise_equal"])
+        if not ok:
+            print("FAIL: the ring-paged sliding-window arm must complete "
+                  "the full workload with outputs bitwise equal to the "
+                  "arena reference")
             sys.exit(1)
 
 

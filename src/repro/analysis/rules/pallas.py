@@ -21,6 +21,22 @@ are followed; dynamic specs are not guessed at):
     (lambda defaults like ``lambda h, qi, ki, g=group:`` don't count);
   * the index_map returns as many indices as the block shape has
     dimensions.
+
+pallas-blockspec-shape layers the ROADMAP-listed *shape* checks on top
+of the arity contract, for whatever is statically resolvable at the
+out_specs/out_shape pair (input operand shapes live at the call's
+arguments and are not guessed at):
+
+  * block_shape must divide the operand shape dim-by-dim (checked when
+    both dims are integer literals or resolvable constants);
+  * index_map block indices must stay in bounds: a constant index `c`
+    needs `c < ceil(shape/block)` blocks along its dim — the symbolic
+    case block==shape (same name) pins that to ONE block, so any
+    constant >= 1 is out of range even with no literal in sight (this
+    is exactly how a stale index survives a head-dim refactor in the
+    paged/ring decode kernels);
+  * a grid parameter used directly as a block index is bounds-checked
+    when its grid dim is a constant.
 """
 from __future__ import annotations
 
@@ -118,6 +134,32 @@ def _spec_index_map(spec: ast.Call) -> Optional[ast.AST]:
     return im
 
 
+def _call_site(ctx: Context, node: ast.Call):
+    """(grid, in_specs, out_specs, n_prefetch) of a pallas_call — pulled
+    off the call itself or its PrefetchScalarGridSpec.  None when the
+    grid_spec is opaque or the prefetch count is dynamic."""
+    grid = _kwarg(node, "grid")
+    in_specs = _kwarg(node, "in_specs")
+    out_specs = _kwarg(node, "out_specs")
+    n_prefetch = 0
+
+    grid_spec = _kwarg(node, "grid_spec")
+    if grid_spec is not None:
+        gs = _resolve_value(ctx, grid_spec, node)
+        if not isinstance(gs, ast.Call):
+            return None         # opaque grid_spec: nothing to check
+        grid = _kwarg(gs, "grid")
+        in_specs = _kwarg(gs, "in_specs")
+        out_specs = _kwarg(gs, "out_specs")
+        np_kw = _kwarg(gs, "num_scalar_prefetch")
+        if np_kw is not None:
+            if not (isinstance(np_kw, ast.Constant)
+                    and isinstance(np_kw.value, int)):
+                return None     # dynamic prefetch count: can't check
+            n_prefetch = np_kw.value
+    return grid, in_specs, out_specs, n_prefetch
+
+
 @register("pallas-kernel-contract")
 def check(ctx: Context) -> Iterator[Finding]:
     for node in ast.walk(ctx.tree):
@@ -126,26 +168,10 @@ def check(ctx: Context) -> Iterator[Finding]:
         resolved = ctx.imports.resolve(node.func)
         if not resolved or resolved.split(".")[-1] != "pallas_call":
             continue
-
-        grid = _kwarg(node, "grid")
-        in_specs = _kwarg(node, "in_specs")
-        out_specs = _kwarg(node, "out_specs")
-        n_prefetch = 0
-
-        grid_spec = _kwarg(node, "grid_spec")
-        if grid_spec is not None:
-            gs = _resolve_value(ctx, grid_spec, node)
-            if not isinstance(gs, ast.Call):
-                continue        # opaque grid_spec: nothing to check
-            grid = _kwarg(gs, "grid")
-            in_specs = _kwarg(gs, "in_specs")
-            out_specs = _kwarg(gs, "out_specs")
-            np_kw = _kwarg(gs, "num_scalar_prefetch")
-            if np_kw is not None:
-                if not (isinstance(np_kw, ast.Constant)
-                        and isinstance(np_kw.value, int)):
-                    continue    # dynamic prefetch count: can't check arity
-                n_prefetch = np_kw.value
+        site = _call_site(ctx, node)
+        if site is None:
+            continue
+        grid, in_specs, out_specs, n_prefetch = site
 
         rank = None if grid is None else _grid_rank(ctx, grid, node)
         specs = (_blockspecs(ctx, in_specs, node)
@@ -175,3 +201,182 @@ def check(ctx: Context) -> Iterator[Finding]:
                     f"BlockSpec block_shape has {shape_len} dimension(s) "
                     f"but its index_map returns {ret_len} index/indices — "
                     "every block dimension needs exactly one index")
+
+
+# ---------------------------------------------------------------------------
+# pallas-blockspec-shape: block_shape divides operand shape; index_map
+# block indices in bounds (constant grids + the symbolic block==shape case)
+# ---------------------------------------------------------------------------
+
+
+def _const_int(node: ast.AST) -> Optional[int]:
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        inner = _const_int(node.operand)
+        return None if inner is None else -inner
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return node.value
+    return None
+
+
+def _tuple_elts(ctx: Context, node: Optional[ast.AST],
+                at: ast.AST) -> Optional[List[ast.AST]]:
+    if node is None:
+        return None
+    node = _resolve_value(ctx, node, at)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return list(node.elts)
+    return None
+
+
+def _grid_dims(ctx: Context, grid: Optional[ast.AST],
+               at: ast.AST) -> Optional[List[Optional[int]]]:
+    """Per-axis constant grid sizes (None where dynamic)."""
+    if grid is None:
+        return None
+    resolved = _resolve_value(ctx, grid, at)
+    if isinstance(resolved, (ast.Tuple, ast.List)):
+        return [_const_int(_resolve_value(ctx, e, at))
+                for e in resolved.elts]
+    c = _const_int(resolved)
+    return [c] if c is not None else None
+
+
+def _block_shape_elts(ctx: Context, spec: ast.Call,
+                      at: ast.AST) -> Optional[List[ast.AST]]:
+    shape = _kwarg(spec, "block_shape")
+    if shape is None and spec.args:
+        shape = spec.args[0]
+    return _tuple_elts(ctx, shape, at)
+
+
+def _struct_shape_elts(ctx: Context, node: ast.AST,
+                       at: ast.AST) -> Optional[List[ast.AST]]:
+    """Shape tuple of a jax.ShapeDtypeStruct(...) literal."""
+    node = _resolve_value(ctx, node, at)
+    if not isinstance(node, ast.Call):
+        return None
+    resolved = ctx.imports.resolve(node.func)
+    if not resolved or resolved.split(".")[-1] != "ShapeDtypeStruct":
+        return None
+    shape = _kwarg(node, "shape")
+    if shape is None and node.args:
+        shape = node.args[0]
+    return _tuple_elts(ctx, shape, at)
+
+
+def _dim_blocks(ctx: Context, b_ast: ast.AST, s_ast: ast.AST,
+                at: ast.AST) -> Tuple[Optional[int], bool]:
+    """(number of blocks along one dim if statically known, divides?).
+
+    The symbolic case matters most in this repo: block dim and operand
+    dim spelled with the SAME name (e.g. ``hd`` vs ``hd``) pin the dim
+    to a single block whatever the runtime value is."""
+    if isinstance(b_ast, ast.Name) and isinstance(s_ast, ast.Name) \
+            and b_ast.id == s_ast.id:
+        return 1, True
+    b = _const_int(_resolve_value(ctx, b_ast, at))
+    s = _const_int(_resolve_value(ctx, s_ast, at))
+    if b is not None and s is not None and b > 0 and s > 0:
+        return -(-s // b), s % b == 0
+    return None, True
+
+
+def _index_map_returns(ctx: Context, fn: ast.AST,
+                       at: ast.AST) -> Optional[Tuple[List[str], List[ast.AST]]]:
+    """(positional param names, returned index expressions) of a lambda
+    index_map — None when the map isn't a resolvable plain lambda."""
+    fn = _resolve_value(ctx, fn, at)
+    if not isinstance(fn, ast.Lambda):
+        return None
+    a = fn.args
+    if a.vararg or a.kwonlyargs or a.kwarg:
+        return None
+    names = [p.arg for p in a.args[:len(a.args) - len(a.defaults)]]
+    if isinstance(fn.body, ast.Tuple):
+        return names, list(fn.body.elts)
+    if isinstance(fn.body, ast.Starred):
+        return None
+    return names, [fn.body]
+
+
+@register("pallas-blockspec-shape",
+          doc="BlockSpec block_shape divides the out operand; index_map "
+              "block indices in bounds (constant grids + block==shape)")
+def check_shape(ctx: Context) -> Iterator[Finding]:
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        resolved = ctx.imports.resolve(node.func)
+        if not resolved or resolved.split(".")[-1] != "pallas_call":
+            continue
+        site = _call_site(ctx, node)
+        if site is None:
+            continue
+        grid, _in_specs, out_specs, _n_prefetch = site
+        grid_dims = _grid_dims(ctx, grid, node)
+
+        specs = _blockspecs(ctx, out_specs, node)
+        out_shape = _kwarg(node, "out_shape")
+        if out_shape is None or not specs:
+            continue
+        structs = _tuple_elts(ctx, out_shape, node) or [out_shape]
+        if len(structs) != len(specs):
+            continue            # can't pair specs to operands reliably
+
+        for spec, struct in zip(specs, structs):
+            blk = _block_shape_elts(ctx, spec, node)
+            opd = _struct_shape_elts(ctx, struct, node)
+            if blk is None or opd is None:
+                continue
+            if len(blk) != len(opd):
+                yield ctx.finding(
+                    "pallas-blockspec-shape", spec,
+                    f"BlockSpec block_shape has {len(blk)} dimension(s) "
+                    f"but the out_shape operand has {len(opd)} — block "
+                    "and operand ranks must match")
+                continue
+            im = _spec_index_map(spec)
+            ret = _index_map_returns(ctx, im, node) if im is not None \
+                else None
+            params, idxs = ret if ret else ([], [])
+            for i, (b_ast, s_ast) in enumerate(zip(blk, opd)):
+                nblocks, divides = _dim_blocks(ctx, b_ast, s_ast, node)
+                if not divides:
+                    yield ctx.finding(
+                        "pallas-blockspec-shape", spec,
+                        f"block_shape dim {i} "
+                        f"({_const_int(_resolve_value(ctx, b_ast, node))}) "
+                        f"does not divide out_shape dim {i} "
+                        f"({_const_int(_resolve_value(ctx, s_ast, node))}) "
+                        "— the trailing block reads/writes out of bounds")
+                if i >= len(idxs):
+                    continue
+                e = idxs[i]
+                c = _const_int(e)
+                if c is not None:
+                    if c < 0:
+                        yield ctx.finding(
+                            "pallas-blockspec-shape", spec,
+                            f"index_map returns negative block index {c} "
+                            f"for dim {i}")
+                    elif nblocks is not None and c >= nblocks:
+                        bound = ("a single block" if nblocks == 1
+                                 else f"{nblocks} block(s)")
+                        yield ctx.finding(
+                            "pallas-blockspec-shape", spec,
+                            f"index_map returns constant block index {c} "
+                            f"for dim {i}, but that dim holds {bound} — "
+                            f"max valid index is {nblocks - 1}")
+                elif isinstance(e, ast.Name) and e.id in params:
+                    axis = params.index(e.id)
+                    gdim = grid_dims[axis] if grid_dims is not None \
+                        and axis < len(grid_dims) else None
+                    if gdim is not None and nblocks is not None \
+                            and gdim > nblocks:
+                        yield ctx.finding(
+                            "pallas-blockspec-shape", spec,
+                            f"index_map passes grid axis {axis} (size "
+                            f"{gdim}) straight through as the block "
+                            f"index for dim {i}, which only holds "
+                            f"{nblocks} block(s)")

@@ -17,6 +17,16 @@ paged KV pool: K/V live in a shared pool of fixed-size blocks
 prefetched block-table slice steers the BlockSpec index_map, so the
 kernel DMAs exactly the row's blocks out of HBM — the gather IS the
 grid, no linearized copy is ever materialized.
+
+`decode_attention_ring_grouped` extends that to sliding-window rings:
+the table is a fixed ring of `ceil(window / block_size)` blocks where
+logical position p lives at ring slot p % window, and a per-row
+scalar-prefetched `ring_starts` rotates the table lookup — entry
+(starts[r] + bi) % W of the table holds ring block bi — so a host that
+rotates a table in place never has to copy it.  The valid mask is keyed
+to the RING slot index (bi * block_size + i < min(length, window)), not
+the storage entry, which makes the output invariant under table
+rotation: rotating (table, start) together is bitwise a no-op.
 """
 from __future__ import annotations
 
@@ -230,3 +240,122 @@ def decode_attention_paged_grouped(q, k_pool, v_pool, block_tables, lengths,
         out_shape=jax.ShapeDtypeStruct((bkv, g, hd), q.dtype),
         interpret=interpret,
     )(lengths, block_tables, q, k_pool, v_pool)
+
+
+def _ring_kernel(lengths_ref, starts_ref, tables_ref, q_ref, k_ref, v_ref,
+                 o_ref, m_scr, l_scr, acc_scr, *, scale, block_size, window):
+    """`_paged_kernel` over a ring: the kv block for grid step (r, bi)
+    is ring block bi — DMA'd from table entry (starts[r] + bi) % W by
+    the in_specs — and the mask compares RING slot indices
+    bi * block_size + i against min(length, window).  starts_ref is
+    consumed by the index_maps only."""
+    r = pl.program_id(0)
+    bi = pl.program_id(1)
+    nb = pl.num_programs(1)
+    del starts_ref
+    limit = jnp.minimum(lengths_ref[r], window)
+
+    @pl.when(bi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)             # [G, hd]
+    k = k_ref[0, :, 0].astype(jnp.float32)       # [bs, hd]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    # zero invalid kv rows (0 * garbage = NaN otherwise); ring slots at
+    # or above min(length, window) were never written (or hold evicted
+    # context a full softmax must not see)
+    v_rows = bi * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, v.shape, 0)
+    v = jnp.where(v_rows < limit, v, 0.0)
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale     # [G, bs]
+    kv_idx = bi * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, logits.shape, 1)
+    logits = jnp.where(kv_idx < limit, logits, _NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, logits.max(axis=1, keepdims=True))
+    p = jnp.exp(logits - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = (acc_scr[...] * corr
+                    + jax.lax.dot_general(
+                        p, v, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+
+    @pl.when(bi == nb - 1)
+    def _emit():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_ring_grouped(q, k_pool, v_pool, block_tables,
+                                  ring_starts, lengths, *, window,
+                                  scale=None, interpret=False):
+    """Ring-table decode attention against a shared paged KV pool.
+
+    q: [BKV, G, hd]; k_pool, v_pool: [NB, block_size, KV, hd];
+    block_tables: int32 [BKV, W] with W = ceil(window / block_size);
+    ring_starts: int32 [BKV] rotation of each row's table (entry
+    (starts[r] + bi) % W holds ring block bi — a row whose table is in
+    ring order passes 0); lengths: int32 [BKV] tokens written so far.
+
+    Logical position p lives at ring slot p % window, i.e. in ring
+    block (p % window) // bs at offset (p % window) % bs.  Exactly the
+    last min(lengths[r], window) positions are valid, and the mask is
+    keyed to ring-slot indices, so the output is bitwise invariant
+    under joint (table, start) rotation.  Returns [BKV, G, hd].
+    """
+    bkv, g, hd = q.shape
+    block_size, kv = k_pool.shape[1], k_pool.shape[2]
+    w = block_tables.shape[1]
+    window = int(window)
+    assert window >= 1, window
+    assert w * block_size >= window, (w, block_size, window)
+    scale = scale if scale is not None else float(1.0 / np.sqrt(hd))
+    lengths = jnp.asarray(lengths, jnp.int32)
+    ring_starts = jnp.asarray(ring_starts, jnp.int32)
+    block_tables = jnp.asarray(block_tables, jnp.int32)
+    assert lengths.shape == (bkv,), (lengths.shape, bkv)
+    assert ring_starts.shape == (bkv,), (ring_starts.shape, bkv)
+    assert block_tables.shape == (bkv, w), (block_tables.shape, bkv, w)
+
+    kern = functools.partial(_ring_kernel, scale=scale,
+                             block_size=block_size, window=window)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(bkv, w),
+        # index maps take (*grid_indices, *scalar_prefetch_refs); ring
+        # block bi of row r sits at table entry (starts[r] + bi) % w
+        in_specs=[
+            pl.BlockSpec((1, g, hd),
+                         lambda r, bi, lens, starts, tabs: (r, 0, 0)),
+            pl.BlockSpec((1, block_size, 1, hd),
+                         lambda r, bi, lens, starts, tabs:
+                         (tabs[r, (starts[r] + bi) % w], 0, r % kv, 0)),
+            pl.BlockSpec((1, block_size, 1, hd),
+                         lambda r, bi, lens, starts, tabs:
+                         (tabs[r, (starts[r] + bi) % w], 0, r % kv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, hd),
+                               lambda r, bi, lens, starts, tabs: (r, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bkv, g, hd), q.dtype),
+        interpret=interpret,
+    )(lengths, ring_starts, block_tables, q, k_pool, v_pool)

@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.decode_attention import (decode_attention_grouped,
-                                            decode_attention_paged_grouped)
+                                            decode_attention_paged_grouped,
+                                            decode_attention_ring_grouped)
 from repro.kernels.flash_attention import flash_attention_bhsd
 from repro.kernels.prox_update import LANE, prox_update_2d
 from repro.kernels.rglru_scan import rglru_scan_bsw
@@ -132,6 +133,31 @@ def decode_attention_paged(q, k_pool, v_pool, block_tables, lengths, *,
     lens = jnp.repeat(jnp.asarray(lengths, jnp.int32), kv)
     out = decode_attention_paged_grouped(qf, k_pool, v_pool, tables, lens,
                                          scale=scale, interpret=interpret)
+    return out.reshape(b, kv, g, hd).reshape(b, h, hd)
+
+
+def decode_attention_ring(q, k_pool, v_pool, block_tables, ring_starts,
+                          lengths, *, window, scale=None, interpret=None):
+    """q: [B,H,hd]; k_pool, v_pool: [NB, bs, KV, hd]; block_tables: int32
+    [B, W] ring tables (W = ceil(window / bs)); ring_starts: int32 [B];
+    lengths: int32 [B].  Returns [B,H,hd].
+
+    Sliding-window analogue of `decode_attention_paged`: row b's last
+    min(lengths[b], window) tokens live in a fixed ring of blocks
+    (position p at ring slot p % window), with ring_starts[b] rotating
+    the table lookup.  Tables/starts/lengths are repeated per kv head
+    for the [B*KV] kernel grid."""
+    interpret = _interpret_default(interpret)
+    b, h, hd = q.shape
+    kv = k_pool.shape[2]
+    g = h // kv
+    qf = q.reshape(b, kv, g, hd).reshape(b * kv, g, hd)
+    tables = jnp.repeat(jnp.asarray(block_tables, jnp.int32), kv, axis=0)
+    starts = jnp.repeat(jnp.asarray(ring_starts, jnp.int32), kv)
+    lens = jnp.repeat(jnp.asarray(lengths, jnp.int32), kv)
+    out = decode_attention_ring_grouped(qf, k_pool, v_pool, tables, starts,
+                                        lens, window=window, scale=scale,
+                                        interpret=interpret)
     return out.reshape(b, kv, g, hd).reshape(b, h, hd)
 
 

@@ -84,6 +84,25 @@ def decode_attention_paged(q, k_pool, v_pool, block_tables, lengths, *,
                             valid_len=lengths, scale=scale)
 
 
+def decode_attention_ring(q, k_pool, v_pool, block_tables, ring_starts,
+                          lengths, *, window, scale=None):
+    """Ring-oracle: undo each row's table rotation (entry
+    (starts[b] + bi) % W holds ring block bi), then the ring is an
+    ordinary paged layout over ring slots — exactly min(length, window)
+    of them valid.
+
+    q: [B,H,hd]; k_pool, v_pool: [NB, bs, KV, hd]; block_tables: int32
+    [B, W]; ring_starts: int32 [B]; lengths: int32 [B]."""
+    b, w = block_tables.shape
+    starts = jnp.asarray(ring_starts, jnp.int32)
+    order = (starts[:, None] + jnp.arange(w, dtype=jnp.int32)[None]) % w
+    ring_tables = jnp.take_along_axis(
+        jnp.asarray(block_tables, jnp.int32), order, axis=1)
+    vl = jnp.minimum(jnp.asarray(lengths, jnp.int32), window)
+    return decode_attention_paged(q, k_pool, v_pool, ring_tables, vl,
+                                  scale=scale)
+
+
 def rwkv6(r, k, v, w, u, state=None):
     """RWKV6 WKV recurrence. r,k,v,w: [B,H,S,hd]; u: [H,hd].
 

@@ -265,6 +265,29 @@ def gqa_decode(params, cfg, x, cache, position, window=0):
 # GQA and MLA decode/prefill math below is identical to the arena path, so
 # the two modes are bit-compatible (tests assert token-level identity).
 #
+# Ring-paged layout (window > 0, GQA only): the table is a FIXED ring of
+# ceil(window / bs) blocks and logical position p lives at ring slot
+# p % window — physical entry (table[(p % window) // bs], (p % window) % bs).
+# This is exactly the arena's ring (`ring_insert` writes at ptr % T with
+# T = window), so ring slot i always holds the latest token with position
+# ≡ i (mod window) and the decode validity mask min(length, window) over
+# ring-slot indices is the arena's mask verbatim: the paged ring stays
+# bit-compatible with the arena sliding-window path, and once the ring is
+# full decode REUSES blocks instead of allocating (the whole point).  Two
+# ring-specific hazards the window paths below handle:
+#   * a chunk's PAD entries map to ring slots that hold valid wrapped
+#     context (in the linear layout pads land harmlessly past validity),
+#     so the windowed chunk scatter routes pads to the null block via the
+#     chunk's valid length;
+#   * ring context entries are not "valid below ctx_len": ring slot j
+#     holds position p_j = ctx_len-1 - ((ctx_len-1-j) % window), and a
+#     chunk query at position q sees it only when j < min(ctx_len, window)
+#     AND p_j > q - window.  Chunk self-attention additionally masks
+#     kv more than `window` behind the query (inert while the engine
+#     clamps chunks to <= window — which it must anyway, or two chunk
+#     positions would scatter to the same ring slot with unspecified
+#     winner).
+#
 # Overwrite-before-valid: every KV position is written (scatter_chunk_pages
 # during prefill, scatter_token_pages as decode crosses it) strictly before
 # the validity length covers it, and positions at or above the validity
@@ -300,7 +323,7 @@ def gather_pages(pool, table):
     return g.reshape((b, w * pool.shape[1]) + pool.shape[2:])
 
 
-def scatter_chunk_pages(pool, entries, table, start):
+def scatter_chunk_pages(pool, entries, table, start, window=0, valid=None):
     """Write a prefill chunk's entries into one slot's blocks.
 
     pool [NB, bs, ...]; entries [C, ...]; table int32 [W]; start = traced
@@ -308,45 +331,78 @@ def scatter_chunk_pages(pool, entries, table, start):
     are routed to the null block 0 (the engine sizes tables so only the
     padded chunk tail can land there; pad entries written into real
     blocks are inert — they sit beyond the slot's validity length and
-    are overwritten by decode before ever becoming valid)."""
+    are overwritten by decode before ever becoming valid).
+
+    window > 0 makes the table a ring: position p writes ring slot
+    p % window.  Pads are NOT inert in a wrapped ring (their ring slots
+    hold valid earlier context), so `valid` — the chunk's true length —
+    must be given and routes entries at or past it to the null block."""
     bs, w = pool.shape[1], table.shape[0]
     c = entries.shape[0]
     p = start + jnp.arange(c)
+    if window:
+        p = p % window
     bi = p // bs
     in_range = bi < w
+    if window:
+        in_range &= jnp.arange(c) < valid
     blk = jnp.where(in_range, table[jnp.minimum(bi, w - 1)], 0)
     return pool.at[blk, p % bs].set(entries.astype(pool.dtype))
 
 
-def scatter_token_pages(pool, entries, tables, positions):
+def scatter_token_pages(pool, entries, tables, positions, window=0):
     """Per-row single-token write: entries [B, ...] at positions[b].
 
     tables int32 [B, W].  Dead rows (engine: zeroed table + position 0)
     write the null block; live rows write distinct allocated blocks, so
-    the batched scatter has no cross-row collisions that matter."""
+    the batched scatter has no cross-row collisions that matter.
+    window > 0: ring layout — position p writes ring slot p % window,
+    overwriting the evicted token exactly as the arena's ring_insert."""
     bs = pool.shape[1]
+    if window:
+        positions = positions % window
     blk = jnp.take_along_axis(tables, (positions // bs)[:, None], 1)[:, 0]
     return pool.at[blk, positions % bs].set(entries.astype(pool.dtype))
 
 
-def _paged_context_attention(q, k_ctx, v_ctx, k_new, v_new, ctx_len, scale):
+def _paged_context_attention(q, k_ctx, v_ctx, k_new, v_new, ctx_len, scale,
+                             window=0):
     """Chunk queries vs (gathered context ++ the chunk's own K/V).
 
     q [B,C,KV,G,hd]; k_ctx/v_ctx [B,T,KV,hd*]; k_new/v_new [B,C,KV,hd*].
     Context keys are valid below ctx_len; chunk keys are causally masked
     within the chunk (padded tail keys sit above every valid query, so
-    the causal mask already hides them).  Returns [B,C,KV,G,hd_v]."""
+    the causal mask already hides them).  Returns [B,C,KV,G,hd_v].
+
+    window > 0: the context is a RING over ring slots (position p at
+    slot p % window).  Ring slot j holds the latest context position
+    congruent to j, p_j = ctx_len-1 - ((ctx_len-1-j) % window); chunk
+    query q_i = ctx_len + i sees it when j < min(ctx_len, window) and
+    p_j > q_i - window, and sees chunk key jj when additionally within
+    `window` behind it — together exactly the arena's sliding-window
+    causal mask over each query's live positions."""
     t = k_ctx.shape[1]
     c = q.shape[1]
     qf = q.astype(jnp.float32)
     ctx_logits = jnp.einsum("bskgh,btkh->bskgt", qf,
                             k_ctx.astype(jnp.float32)) * scale
-    ctx_valid = jnp.arange(t) < ctx_len                       # [T]
-    ctx_logits = jnp.where(ctx_valid[None, None, None, None, :],
-                           ctx_logits, _NEG_INF)
+    if window:
+        j = jnp.arange(t)
+        p_j = ctx_len - 1 - (ctx_len - 1 - j) % window        # [T]
+        q_pos = ctx_len + jnp.arange(c)                       # [C]
+        ctx_valid = ((j < jnp.minimum(ctx_len, window))[None, :]
+                     & (p_j[None, :] > q_pos[:, None] - window))  # [C, T]
+        ctx_logits = jnp.where(ctx_valid[None, :, None, None, :],
+                               ctx_logits, _NEG_INF)
+    else:
+        ctx_valid = jnp.arange(t) < ctx_len                   # [T]
+        ctx_logits = jnp.where(ctx_valid[None, None, None, None, :],
+                               ctx_logits, _NEG_INF)
     self_logits = jnp.einsum("bskgh,btkh->bskgt", qf,
                              k_new.astype(jnp.float32)) * scale
     causal = jnp.arange(c)[:, None] >= jnp.arange(c)[None, :]  # [C, C]
+    if window:
+        causal &= (jnp.arange(c)[:, None] - jnp.arange(c)[None, :]) < window
     self_logits = jnp.where(causal[None, :, None, None, :],
                             self_logits, _NEG_INF)
     logits = jnp.concatenate([ctx_logits, self_logits], axis=-1)
@@ -355,14 +411,21 @@ def _paged_context_attention(q, k_ctx, v_ctx, k_new, v_new, ctx_len, scale):
     return jnp.einsum("bskgt,btkh->bskgh", p, v_all)
 
 
-def gqa_prefill_paged(params, cfg, x, cache, table, ctx_len):
+def gqa_prefill_paged(params, cfg, x, cache, table, ctx_len, window=0,
+                      valid=None):
     """One prefill chunk against a paged pool (batch-1 admission).
 
     x [1,C,D]; cache {k, v: [NB, bs, KV, hd]}; table int32 [W]; ctx_len =
     tokens already in the slot's blocks.  Attends chunk queries to the
     gathered context plus the chunk itself (insert-then-attend, same
     semantics as the arena prefill), scatters the chunk's K/V into the
-    slot's blocks.  Returns ([1,C,D], new cache)."""
+    slot's blocks.  Returns ([1,C,D], new cache).
+
+    window > 0: the table is a ring over ring slots (position p at slot
+    p % window); attention reads the pre-scatter pool (so the ring still
+    holds positions ctx_len-window .. ctx_len-1) and the scatter routes
+    only the chunk's `valid` true tokens (pads would land on live
+    wrapped ring slots)."""
     b, c, _ = x.shape
     h, hd = cfg.num_heads, cfg.head_dim
     positions = ctx_len + jnp.broadcast_to(jnp.arange(c)[None], (b, c))
@@ -370,16 +433,18 @@ def gqa_prefill_paged(params, cfg, x, cache, table, ctx_len):
     k_ctx = gather_pages(cache["k"], table[None])
     v_ctx = gather_pages(cache["v"], table[None])
     out = _paged_context_attention(q, k_ctx, v_ctx, k_new, v_new, ctx_len,
-                                   float(1.0 / np.sqrt(hd)))
+                                   float(1.0 / np.sqrt(hd)), window=window)
     out = out.reshape(b, c, h * hd).astype(x.dtype)
     new_cache = {
-        "k": scatter_chunk_pages(cache["k"], k_new[0], table, ctx_len),
-        "v": scatter_chunk_pages(cache["v"], v_new[0], table, ctx_len),
+        "k": scatter_chunk_pages(cache["k"], k_new[0], table, ctx_len,
+                                 window=window, valid=valid),
+        "v": scatter_chunk_pages(cache["v"], v_new[0], table, ctx_len,
+                                 window=window, valid=valid),
     }
     return out @ params["wo"], new_cache
 
 
-def gqa_decode_paged(params, cfg, x, cache, tables, lengths):
+def gqa_decode_paged(params, cfg, x, cache, tables, lengths, window=0):
     """Per-row decode against a paged pool.
 
     x [B,1,D]; cache {k, v: [NB, bs, KV, hd]}; tables int32 [B, W];
@@ -387,19 +452,27 @@ def gqa_decode_paged(params, cfg, x, cache, tables, lengths):
     position of the incoming token).  Inserts the new token's K/V at
     position lengths[b], then attends over the gathered valid entries —
     the same insert-then-attend masked softmax as the arena's
-    `gqa_decode`.  Returns ([B,1,D], new cache)."""
+    `gqa_decode`.  Returns ([B,1,D], new cache).
+
+    window > 0: the table is a ring — the token scatters to ring slot
+    lengths[b] % window and min(lengths[b]+1, window) ring slots are
+    live, exactly the arena's `ring_insert` + capped-mask decode."""
     b = x.shape[0]
     h, hd = cfg.num_heads, cfg.head_dim
     pos = jnp.reshape(lengths, (b, 1))
     q, k_new, v_new = _project_qkv(params, cfg, x, pos)
     q = q[:, 0]                                   # [B,KV,G,hd]
 
-    ck = scatter_token_pages(cache["k"], k_new[:, 0], tables, lengths)
-    cv = scatter_token_pages(cache["v"], v_new[:, 0], tables, lengths)
+    ck = scatter_token_pages(cache["k"], k_new[:, 0], tables, lengths,
+                             window=window)
+    cv = scatter_token_pages(cache["v"], v_new[:, 0], tables, lengths,
+                             window=window)
     kf = gather_pages(ck, tables)                 # [B, T, KV, hd]
     vf = gather_pages(cv, tables)
     t = kf.shape[1]
     num_valid = lengths + 1
+    if window:
+        num_valid = jnp.minimum(num_valid, window)
 
     logits = jnp.einsum("bkgh,btkh->bkgt", q.astype(jnp.float32),
                         kf.astype(jnp.float32)) * float(1.0 / np.sqrt(hd))
@@ -741,7 +814,7 @@ def gqa_mixed(params, cfg, x, nd, pos_d, pos_p, cache, p_len, p_slot,
 
 
 def gqa_mixed_paged(params, cfg, x, nd, pos_d, pos_p, cache, tables, lengths,
-                    ctx_len, c_table):
+                    ctx_len, c_table, window=0, c_valid=None):
     """Fused paged layer: decode rows [:nd] + one prefill chunk [nd:].
 
     cache: one pool layer {k, v: [NB, bs, KV, hd]}.  Decode scatters
@@ -749,6 +822,10 @@ def gqa_mixed_paged(params, cfg, x, nd, pos_d, pos_p, cache, tables, lengths,
     its context from the updated pool and scatters its own entries —
     the same op order as `decode_rows_paged` followed by
     `prefill_chunk_into_blocks`, whose write sets are disjoint.
+
+    window > 0: both cores run ring-paged — see `gqa_decode_paged` /
+    `gqa_prefill_paged`.  Write sets stay disjoint (the chunk's table
+    is private to its stream).
 
     Returns ([1, nd+C, D], new cache)."""
     _, s_tot, _ = x.shape
@@ -759,14 +836,19 @@ def gqa_mixed_paged(params, cfg, x, nd, pos_d, pos_p, cache, tables, lengths,
 
     # decode core (== gqa_decode_paged after projection)
     qd = q[0, :nd]
-    ck = scatter_token_pages(cache["k"], k[0, :nd], tables, lengths)
-    cv = scatter_token_pages(cache["v"], v[0, :nd], tables, lengths)
+    ck = scatter_token_pages(cache["k"], k[0, :nd], tables, lengths,
+                             window=window)
+    cv = scatter_token_pages(cache["v"], v[0, :nd], tables, lengths,
+                             window=window)
     kf = gather_pages(ck, tables)
     vf = gather_pages(cv, tables)
     t = kf.shape[1]
+    num_valid = lengths + 1
+    if window:
+        num_valid = jnp.minimum(num_valid, window)
     logits = jnp.einsum("bkgh,btkh->bkgt", qd.astype(jnp.float32),
                         kf.astype(jnp.float32)) * scale
-    valid = jnp.arange(t) < jnp.reshape(lengths + 1, (-1, 1))
+    valid = jnp.arange(t) < jnp.reshape(num_valid, (-1, 1))
     logits = jnp.where(valid[:, None, None, :], logits, _NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)
     out_d = jnp.einsum("bkgt,btkh->bkgh", p, vf.astype(jnp.float32))
@@ -778,12 +860,14 @@ def gqa_mixed_paged(params, cfg, x, nd, pos_d, pos_p, cache, tables, lengths,
     k_ctx = gather_pages(ck, c_table[None])
     v_ctx = gather_pages(cv, c_table[None])
     out_p = _paged_context_attention(q[:, nd:], k_ctx, v_ctx, k_new, v_new,
-                                     ctx_len, scale)
+                                     ctx_len, scale, window=window)
     out_p = out_p.reshape(1, c, h * hd).astype(x.dtype)
 
     new_cache = {
-        "k": scatter_chunk_pages(ck, k_new[0], c_table, ctx_len),
-        "v": scatter_chunk_pages(cv, v_new[0], c_table, ctx_len),
+        "k": scatter_chunk_pages(ck, k_new[0], c_table, ctx_len,
+                                 window=window, valid=c_valid),
+        "v": scatter_chunk_pages(cv, v_new[0], c_table, ctx_len,
+                                 window=window, valid=c_valid),
     }
     out = jnp.concatenate([out_d, out_p], axis=1)
     return out @ params["wo"], new_cache

@@ -27,14 +27,18 @@ class Model:
     prefill: Callable        # (params, batch) -> (logits, caches)
     decode_step: Callable    # (params, token, caches, position) -> (logits, caches)
     init_cache: Callable     # (batch, seq_len, window) -> caches
+    # Effective sliding window (cfg.attn_window or the build_model
+    # override; 0 = full causal).  The serving engine reads this to size
+    # ring tables / block reservations for windowed paged stacks.
+    window: int = 0
     # slot-arena continuous-batching entry points (repro.serve); None for
     # families without them (encoder-decoder).
     init_arena: Callable = None         # (slots, capacity, dtype) -> arena
     prefill_into_slot: Callable = None  # (params, tokens, length, slot, arena)
     decode_rows: Callable = None        # (params, token, arena, positions)
     # paged-KV (block-pool) entry points; None for families that cannot
-    # page (encoder-decoder, recurrent state, sliding-window rings — the
-    # engine auto-selects the arena for those).
+    # page (encoder-decoder, recurrent state — the engine auto-selects
+    # the arena for those; sliding-window GQA pages as a block ring).
     init_pool: Callable = None          # (num_blocks, block_size, dtype)
     prefill_chunk_into_blocks: Callable = None  # (params, tokens, length,
                                                 #  ctx_len, table, pool)
@@ -71,6 +75,7 @@ def build_model(cfg: ArchConfig, window: int = 0) -> Model:
         )
     return Model(
         cfg=cfg,
+        window=cfg.attn_window or window,
         init=lambda key: TF.transformer_init(cfg, key),
         train_loss=lambda p, b, **kw: TF.train_loss(cfg, p, b, window=window, **kw),
         prefill=lambda p, b, **kw: TF.prefill(cfg, p, b, window=window, **kw),
@@ -89,9 +94,10 @@ def build_model(cfg: ArchConfig, window: int = 0) -> Model:
             cfg, num_blocks, block_size, window=window, **kw),
         prefill_chunk_into_blocks=lambda p, tokens, length, ctx, table, pool:
             TF.prefill_chunk_into_blocks(cfg, p, tokens, length, ctx,
-                                         table, pool),
+                                         table, pool, window=window),
         decode_rows_paged=lambda p, t, pool, tables, lengths:
-            TF.decode_rows_paged(cfg, p, t, pool, tables, lengths),
+            TF.decode_rows_paged(cfg, p, t, pool, tables, lengths,
+                                 window=window),
         prefill_into_slot_token=lambda p, tokens, length, slot, caches:
             TF.prefill_into_slot_token(cfg, p, tokens, length, slot, caches,
                                        window=window),
@@ -99,15 +105,18 @@ def build_model(cfg: ArchConfig, window: int = 0) -> Model:
             cfg, p, t, c, pos, window=window),
         prefill_chunk_into_blocks_token=lambda p, tokens, length, ctx, table,
             pool: TF.prefill_chunk_into_blocks_token(cfg, p, tokens, length,
-                                                     ctx, table, pool),
+                                                     ctx, table, pool,
+                                                     window=window),
         decode_rows_paged_tokens=lambda p, t, pool, tables, lengths:
-            TF.decode_rows_paged_tokens(cfg, p, t, pool, tables, lengths),
+            TF.decode_rows_paged_tokens(cfg, p, t, pool, tables, lengths,
+                                        window=window),
         mixed_step_tokens=lambda p, t, c, pos, pt, pl, ps:
             TF.mixed_step_tokens(cfg, p, t, c, pos, pt, pl, ps,
                                  window=window),
         mixed_step_paged_tokens=lambda p, t, pool, tables, lengths, ct, cl,
             ctx, ctab: TF.mixed_step_paged_tokens(cfg, p, t, pool, tables,
-                                                  lengths, ct, cl, ctx, ctab),
+                                                  lengths, ct, cl, ctx, ctab,
+                                                  window=window),
     )
 
 

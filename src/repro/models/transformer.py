@@ -107,15 +107,24 @@ def block_apply(cfg, kind, params, x, *, positions, mode, cache=None,
         h = norm(params["ln1"], x)
         if paged is not None:
             if mode == "prefill":
-                fn = (A.mla_prefill_paged if cfg.mla is not None
-                      else A.gqa_prefill_paged)
-                attn_out, new_cache = fn(params["attn"], cfg, h, cache,
-                                         paged["table"], paged["ctx_len"])
+                if cfg.mla is not None:
+                    attn_out, new_cache = A.mla_prefill_paged(
+                        params["attn"], cfg, h, cache,
+                        paged["table"], paged["ctx_len"])
+                else:
+                    attn_out, new_cache = A.gqa_prefill_paged(
+                        params["attn"], cfg, h, cache,
+                        paged["table"], paged["ctx_len"],
+                        window=window, valid=paged.get("valid"))
             else:
-                fn = (A.mla_decode_paged if cfg.mla is not None
-                      else A.gqa_decode_paged)
-                attn_out, new_cache = fn(params["attn"], cfg, h, cache,
-                                         paged["tables"], paged["lengths"])
+                if cfg.mla is not None:
+                    attn_out, new_cache = A.mla_decode_paged(
+                        params["attn"], cfg, h, cache,
+                        paged["tables"], paged["lengths"])
+                else:
+                    attn_out, new_cache = A.gqa_decode_paged(
+                        params["attn"], cfg, h, cache,
+                        paged["tables"], paged["lengths"], window=window)
             x = x + attn_out
         elif mode in ("train", "prefill"):
             if cfg.mla is not None:
@@ -504,19 +513,20 @@ def decode_rows_tokens(cfg, params, tokens, caches, positions, window=0):
 
 
 def prefill_chunk_into_blocks_token(cfg, params, tokens, length, ctx_len,
-                                    block_table, pool):
+                                    block_table, pool, window=0):
     """`prefill_chunk_into_blocks` returning ([] int32 token, pool).
 
     The token is only meaningful for the prompt's final chunk (earlier
     chunks' last positions are mid-prompt); computing it every chunk is
     a vocab-length argmax, far cheaper than shipping logits."""
     logits, pool = prefill_chunk_into_blocks(cfg, params, tokens, length,
-                                             ctx_len, block_table, pool)
+                                             ctx_len, block_table, pool,
+                                             window=window)
     return _greedy_last(logits), pool
 
 
 def decode_rows_paged_tokens(cfg, params, tokens, pool, block_tables,
-                             lengths):
+                             lengths, window=0):
     """`decode_rows_paged` returning token ids and advanced lengths.
 
     tokens: [B] int32; lengths: int32 [B].  Returns (next [B] int32,
@@ -526,7 +536,7 @@ def decode_rows_paged_tokens(cfg, params, tokens, pool, block_tables,
     too), and the engine masks their tokens host-side."""
     lengths = jnp.asarray(lengths, jnp.int32)
     logits, pool = decode_rows_paged(cfg, params, tokens[:, None], pool,
-                                     block_tables, lengths)
+                                     block_tables, lengths, window=window)
     nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
     return nxt, pool, lengths + 1
 
@@ -663,7 +673,7 @@ def mixed_step_tokens(cfg, params, tokens, caches, positions,
 
 
 def mixed_step_paged_tokens(cfg, params, tokens, pool, block_tables, lengths,
-                            c_tokens, c_len, ctx_len, c_table):
+                            c_tokens, c_len, ctx_len, c_table, window=0):
     """One fused pool launch: decode all rows + stream one prefill chunk.
 
     tokens/block_tables/lengths: the paged decode operands; the slot
@@ -676,6 +686,7 @@ def mixed_step_paged_tokens(cfg, params, tokens, pool, block_tables, lengths,
     Returns (next [B] int32, pool, lengths + 1, c_tok [] int32 — only
     meaningful when this was the prompt's final chunk)."""
     params = _cast(cfg, params)
+    win = cfg.attn_window or window
     b = tokens.shape[0]
     c = c_tokens.shape[1]
     lengths = jnp.asarray(lengths, jnp.int32)
@@ -690,7 +701,8 @@ def mixed_step_paged_tokens(cfg, params, tokens, pool, block_tables, lengths,
     else:
         def attn_fn(p, h, cc):
             return A.gqa_mixed_paged(p, cfg, h, b, pos_d, pos_p, cc,
-                                     block_tables, lengths, ctx_len, c_table)
+                                     block_tables, lengths, ctx_len, c_table,
+                                     window=win, c_valid=c_len)
 
     x, pool = _mixed_forward(cfg, params, x, pool, attn_fn)
     nxt, c_tok = _mixed_outputs(cfg, params, x, b, b + c_len - 1)
@@ -709,10 +721,18 @@ def mixed_step_paged_tokens(cfg, params, tokens, pool, block_tables, lengths,
 # is identical, only the storage indirection differs.  Long prompts stream
 # in through `prefill_chunk_into_blocks` (fixed-size chunks, one compile)
 # instead of one padded batch-1 launch.  Only pure attention stacks
-# (GQA / MLA, full causal) are paged — recurrent state has no pages, a
-# sliding-window ring relies on eviction (which pages never do), and
-# moe expert capacity depends on the static chunk length (chunking
-# would change routing); the engine auto-selects the arena for those.
+# (GQA / MLA full-causal, GQA sliding-window) are paged — recurrent
+# state has no pages, and moe expert capacity depends on the static
+# chunk length (chunking would change routing); the engine
+# auto-selects the arena for those.
+#
+# Sliding-window GQA pages as a RING: a slot's table is a fixed
+# ceil(window / bs)-block ring over ring slots (position p at slot
+# p % window), so eviction is just overwrite and long generations
+# allocate zero blocks beyond the ring — see models/attention.py
+# "Ring-paged layout".  MLA + window is NOT paged (the arena's
+# mla_prefill ignores the window, so there is no windowed-MLA family
+# to stay bit-identical with); init_pool keeps raising for it.
 # ---------------------------------------------------------------------------
 
 
@@ -729,10 +749,11 @@ def init_pool(cfg, num_blocks, block_size, window=0, dtype=jnp.bfloat16):
         raise NotImplementedError(
             f"paged KV needs a pure attention stack, got "
             f"{set(cfg.layer_types)} ({cfg.name})")
-    if window or cfg.attn_window:
+    if (window or cfg.attn_window) and cfg.mla is not None:
         raise NotImplementedError(
-            "paged KV is full-causal only: a sliding-window ring relies on "
-            "eviction, which pages never do (use the slot arena)")
+            "paged KV + sliding window is GQA-only: the arena mla_prefill "
+            "ignores the window, so there is no windowed-MLA family for a "
+            "ring to stay bit-identical with (use the slot arena)")
     segs = build_segments(cfg.layer_types)
     pools = []
     for kind, count in segs:
@@ -744,12 +765,14 @@ def init_pool(cfg, num_blocks, block_size, window=0, dtype=jnp.bfloat16):
 
 
 def prefill_chunk_into_blocks(cfg, params, tokens, length, ctx_len,
-                              block_table, pool):
+                              block_table, pool, window=0):
     """Stream one prompt chunk into a slot's blocks (batch-1 admission).
 
     tokens: [1, C] int32, the next chunk right-padded to the fixed chunk
     size C (pads are causally invisible to valid positions and their
-    writes land beyond the slot's validity length, so they are inert).
+    writes land beyond the slot's validity length, so they are inert —
+    on a ring, `length` additionally routes their scatter to the null
+    block, since a pad's ring slot can hold live wrapped context).
     length: valid tokens in this chunk (traced scalar).
     ctx_len: tokens already streamed into the slot's blocks (traced).
     block_table: int32 [W] physical block ids for this slot (traced
@@ -759,18 +782,21 @@ def prefill_chunk_into_blocks(cfg, params, tokens, length, ctx_len,
     Returns (logits [1,1,V] at chunk position length-1 — only meaningful
     for the final chunk — and the updated pool)."""
     params = _cast(cfg, params)
+    win = cfg.attn_window or window
     x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.compute_dtype))
     _, c, _ = x.shape
     positions = ctx_len + jnp.broadcast_to(jnp.arange(c)[None], (1, c))
     x, pool, _ = forward(cfg, params, x, positions=positions, mode="prefill",
-                         caches=pool,
-                         paged={"table": block_table, "ctx_len": ctx_len})
+                         caches=pool, window=win,
+                         paged={"table": block_table, "ctx_len": ctx_len,
+                                "valid": length})
     h_last = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
     logits = logits_fn(cfg, params, h_last).astype(jnp.float32)
     return logits, pool
 
 
-def decode_rows_paged(cfg, params, token, pool, block_tables, lengths):
+def decode_rows_paged(cfg, params, token, pool, block_tables, lengths,
+                      window=0):
     """One decode step over all slots against the shared block pool.
 
     token: [B,1] int32; block_tables: int32 [B, W]; lengths: int32 [B]
@@ -780,12 +806,13 @@ def decode_rows_paged(cfg, params, token, pool, block_tables, lengths):
 
     Returns (logits [B,1,V], new pool)."""
     params = _cast(cfg, params)
+    win = cfg.attn_window or window
     x = embed(params["embed"], token).astype(jnp.dtype(cfg.compute_dtype))
     b = x.shape[0]
     lengths = jnp.reshape(jnp.asarray(lengths, jnp.int32), (b,))
     positions = jnp.reshape(lengths, (b, 1))
     x, pool, _ = forward(cfg, params, x, positions=positions, mode="decode",
-                         caches=pool,
+                         caches=pool, window=win,
                          paged={"tables": block_tables, "lengths": lengths})
     logits = logits_fn(cfg, params, x).astype(jnp.float32)
     return logits, pool

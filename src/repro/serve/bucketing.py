@@ -46,7 +46,8 @@ def chunks_needed(n: int, chunk: int) -> int:
     return blocks_needed(n, chunk)
 
 
-def table_width(num_tokens: int, block_size: int, num_blocks: int) -> int:
+def table_width(num_tokens: int, block_size: int, num_blocks: int,
+                window: int = 0) -> int:
     """Pow2-bucketed block-table width covering `num_tokens` positions.
 
     The paged decode step (and the mixed decode+chunk step) compile once
@@ -57,6 +58,16 @@ def table_width(num_tokens: int, block_size: int, num_blocks: int) -> int:
     the decode launch adds zero new width families: a mixed step at
     width W lowers exactly once, whatever mix of prompt lengths streams
     through it.
+
+    window > 0 (ring-paged sliding window): a slot never holds more
+    than ceil(window / block_size) blocks, so the width saturates there
+    regardless of num_tokens.  The pow2 bucket may still round above
+    the ring (e.g. 3-block ring -> width 4); the extra entries stay
+    null-block and masked, and collapsing every long length into the
+    saturated bucket is what makes unbounded generations a single
+    compile family.
     """
+    if window:
+        num_tokens = min(int(num_tokens), int(window))
     return min(bucket_length(blocks_needed(num_tokens, block_size)),
                num_blocks)

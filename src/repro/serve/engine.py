@@ -30,10 +30,14 @@ API-BCD's asynchrony:
     are bounded by the pool, not a per-slot capacity.  Long prompts
     stream in through fixed-size **chunked prefill** (one compile)
     instead of one padded batch-1 launch.  Paged mode covers
-    attention-family stacks (GQA and MLA share the code path); the
-    engine auto-selects the arena for recurrent state (no pages to
-    page) and sliding-window rings (they rely on eviction, which pages
-    never do).
+    attention-family stacks (GQA and MLA share the code path), and
+    sliding-window GQA pages as a block **ring** — a slot holds at most
+    ceil(window / block_size) blocks, position p lives at ring slot
+    p % window, eviction is overwrite, and a full-ring generation
+    allocates zero further blocks however long it runs.  The engine
+    auto-selects the arena for recurrent state (no pages to page) and
+    windowed MLA (the arena mla_prefill ignores the window, so no
+    windowed-MLA family exists to stay bit-identical with).
 
 Paged admission comes in two policies (`preemption=`):
 
@@ -198,14 +202,22 @@ class FamilyCaps:
         lengths.
       supports_paging: the shared block-pool KV backend works (all-attn
         stack and init_pool accepts the family — recurrent state has no
-        pages to page; window rings rely on eviction, which pages never
-        do).
+        pages to page).  Sliding-window GQA pages as a fixed block RING
+        (position p at ring slot p % window — eviction is overwrite);
+        windowed MLA has no windowed arena family to stay bit-identical
+        with and keeps the arena.
       supports_chunked_prefill: prompts can stream in through fixed
         chunks (the paged admission path; rides the same predicate).
       supports_mixed_step: the unified decode+prefill launch is sound —
-        requires a row-independent decode over a dead slot that the
-        fused prefill fully overwrites, which is the pad_prompts
-        predicate, plus the model exposing the mixed entry points.
+        requires a row-independent decode over a dead slot whose fused
+        prefill writes it cannot corrupt: prompt padding (pad_prompts)
+        gives the arena that, null-block table routing gives the pool
+        that (supports_paging); either predicate plus the model's mixed
+        entry points unlocks the step.  The Engine additionally gates
+        overlap on the backend it resolved to — a windowed stack that
+        fell back to the ARENA stays serialized (its arena prefill
+        cannot pad, so the fused arena step has no compiled shape for
+        it), while the same stack paged gets the full overlap path.
     """
     pad_prompts: bool
     supports_paging: bool
@@ -213,13 +225,31 @@ class FamilyCaps:
     supports_mixed_step: bool
 
 
+# probe_family_caps memo: eval_shape-tracing every entry point per Engine
+# construction is pure overhead when engines share a model (the
+# BatchedServer shim builds one per cache bucket).  Weakly keyed by the
+# Model exactly like _JIT_CACHE below; the inner key is the probe's
+# remaining signature.
+_CAPS_CACHE = weakref.WeakKeyDictionary()
+
+
 def probe_family_caps(model, *, max_batch: int = 1, capacity: int = 256,
                       cache_dtype=jnp.bfloat16) -> FamilyCaps:
     """Probe what the serving engine may do with `model` (abstractly —
-    eval_shape only, no allocation).  `capacity` matters: a window
-    override baked into the model caps its rings below a large enough
-    capacity, which disables padding (and a windowed init_pool raises,
-    disabling paging)."""
+    eval_shape only, no allocation; memoized per model).  `capacity`
+    matters: a window override baked into the model caps its rings
+    below a large enough capacity, which disables padding.  A windowed
+    GQA init_pool accepts (the pool pages the window as a block ring);
+    windowed MLA raises, disabling paging."""
+    per_model = _CAPS_CACHE.setdefault(model, {})
+    key = (int(max_batch), int(capacity), jnp.dtype(cache_dtype).name)
+    if key not in per_model:
+        per_model[key] = _probe_family_caps(model, max_batch, capacity,
+                                            cache_dtype)
+    return per_model[key]
+
+
+def _probe_family_caps(model, max_batch, capacity, cache_dtype) -> FamilyCaps:
     if model.prefill_into_slot is None:
         return FamilyCaps(False, False, False, False)
     all_attn = all(t == "attn" for t in model.cfg.layer_types)
@@ -233,7 +263,13 @@ def probe_family_caps(model, *, max_batch: int = 1, capacity: int = 256,
             paging = True
         except NotImplementedError:
             pass
-    mixed = bool(pad_prompts and model.mixed_step_tokens is not None
+    # the mixed step needs a dead slot the fused prefill fully
+    # overwrites: prompt padding gives the arena that (pad_prompts), the
+    # null-block table routing gives the pool that (paging) — either
+    # backend being sound unlocks the entry points; the Engine still
+    # gates overlap on the backend it actually resolved to
+    mixed = bool((pad_prompts or paging)
+                 and model.mixed_step_tokens is not None
                  and model.mixed_step_paged_tokens is not None)
     return FamilyCaps(pad_prompts=pad_prompts, supports_paging=paging,
                       supports_chunked_prefill=paging,
@@ -327,10 +363,17 @@ class Engine:
                                       cache_dtype=cache_dtype)
         self._pad_prompts = self.caps.pad_prompts
         self.paged = bool(paged and self.caps.supports_paging)
-        # overlapped admission needs the unified mixed step; families
-        # without it keep the serialized scheduler (exact behavior of
-        # overlap=False)
-        self.overlap = bool(overlap and self.caps.supports_mixed_step)
+        # effective sliding window (0 = full causal): sizes ring tables,
+        # block reservations and width buckets on the paged backend
+        self.window = int(model.window or 0)
+        # overlapped admission needs the unified mixed step AND a
+        # backend whose dead slots survive a fused prefill: the pool
+        # always qualifies (null-block routing), the arena only when it
+        # can pad prompts — a windowed ARENA engine stays serialized
+        # (exact behavior of overlap=False), a windowed PAGED engine
+        # overlaps
+        self.overlap = bool(overlap and self.caps.supports_mixed_step
+                            and (self.paged or self.caps.pad_prompts))
         if overlap_mode == "auto":
             # a nontrivial data axis rules fused out twice over: the
             # [1, B+S, D] mixed batch gives it nothing to shard (the
@@ -363,6 +406,12 @@ class Engine:
                 else max(1, self.max_batch * self.capacity
                          // self.block_size))
             self.prefill_chunk = int(prefill_chunk)
+            if self.window:
+                # a chunk wider than the ring would scatter two of its
+                # positions into the same ring slot in one launch
+                # (unspecified scatter winner — the later position must
+                # survive, and only chunk <= window guarantees it)
+                self.prefill_chunk = min(self.prefill_chunk, self.window)
             self._allocator = BlockAllocator(self.num_blocks)
             # one table row per decode slot; the full width lets a
             # single request, at the limit, use every pool block — but
@@ -524,17 +573,31 @@ class Engine:
         plen + max_new - 1 tokens (the final token is never inserted).
         Invariant under preemption: folding k generated tokens into the
         recompute prefill grows the prompt by k and shrinks the
-        remaining budget by k."""
-        return blocks_needed(plen + max_new - 1, self.block_size)
+        remaining budget by k.  A sliding-window ring caps the peak at
+        ceil(window / block_size) whatever the budget — unbounded
+        generations reserve a constant ring."""
+        tokens = plen + max_new - 1
+        if self.window:
+            tokens = min(tokens, self.window)
+        return blocks_needed(tokens, self.block_size)
 
+    def _prompt_blocks(self, plen: int) -> int:
+        """Blocks a prompt prefill occupies: its length, ring-capped —
+        a longer-than-window prompt wraps in place instead of growing."""
+        if self.window:
+            plen = min(plen, self.window)
+        return blocks_needed(plen, self.block_size)
 
     def _table_width(self, num_tokens: int) -> int:
         """Pow2-bucketed table columns covering `num_tokens` positions
         (block-table slices are jit shapes: bucketing bounds compiles at
         O(log num_blocks) while per-step gather/kernel work tracks the
         live maximum instead of the whole pool; the mixed step reuses
-        the same width for its chunk table — see bucketing.table_width)."""
-        return table_width(num_tokens, self.block_size, self.num_blocks)
+        the same width for its chunk table — see bucketing.table_width).
+        Ring-paged widths saturate at the ring, so unbounded windowed
+        generations stay one compile family."""
+        return table_width(num_tokens, self.block_size, self.num_blocks,
+                           window=self.window)
 
     def submit(self, prompt, max_new_tokens: int,
                eos_id: Optional[int] = None) -> int:
@@ -624,7 +687,7 @@ class Engine:
         token is already known — nothing to resolve)."""
         seq = req.prompt
         plen = len(seq)
-        n_prompt = blocks_needed(plen, self.block_size)
+        n_prompt = self._prompt_blocks(plen)
         blocks = self._allocator.alloc(n_prompt)
         if self.preemption == "reserve":
             need = self._worst_case_blocks(len(req.prompt),
@@ -752,7 +815,7 @@ class Engine:
         # would exceed the request's lifetime worst case (already
         # bounded by the pool in submit()), else a pool-filling prompt
         # with a tiny budget could never be admitted.
-        need_now = blocks_needed(len(req.prompt), self.block_size)
+        need_now = self._prompt_blocks(len(req.prompt))
         if need_now + _ADMIT_WATERMARK <= worst:
             return self._allocator.can_allocate(need_now,
                                                 watermark=_ADMIT_WATERMARK)
@@ -927,7 +990,14 @@ class Engine:
         for s in sorted(active, key=lambda t: self._slot_req[t].uid):
             if self._slot_req[s] is None:
                 continue        # preempted by an earlier top-up
-            bi = int(self._lengths[s]) // self.block_size
+            pos = int(self._lengths[s])
+            if self.window:
+                # ring-paged: the write lands at ring slot pos % window,
+                # so once the ring's blocks exist the `!= 0` check below
+                # short-circuits every subsequent step — a full-ring
+                # generation allocates ZERO further blocks, however long
+                pos %= self.window
+            bi = pos // self.block_size
             if self._tables[s, bi] != 0:
                 continue
             if self.preemption == "reserve":
@@ -964,7 +1034,7 @@ class Engine:
         self._slot_req[slot] = req
         self._gen[slot] = []
         if self.paged:
-            n_prompt = blocks_needed(plen, self.block_size)
+            n_prompt = self._prompt_blocks(plen)
             blocks = self._allocator.alloc(n_prompt)
             if self.preemption == "reserve":
                 need = self._worst_case_blocks(plen, req.max_new_tokens)
@@ -1001,7 +1071,7 @@ class Engine:
         plen = len(req.prompt)
         self._slot_req[slot] = req
         self._gen[slot] = []
-        n_prompt = blocks_needed(plen, self.block_size)
+        n_prompt = self._prompt_blocks(plen)
         blocks = self._allocator.alloc(n_prompt)
         if self.preemption == "reserve":
             need = self._worst_case_blocks(plen, req.max_new_tokens)

@@ -45,6 +45,7 @@ def rules_hit(src, path="fixture.py"):
 EXPECTED_RULES = {
     "wall-clock-duration", "quadratic-queue", "host-sync-in-hot-loop",
     "recompile-hazard", "nondeterminism-in-dist", "pallas-kernel-contract",
+    "pallas-blockspec-shape",
 }
 
 
@@ -378,6 +379,68 @@ def test_pallas_prefetch_grid_spec_arity():
 
 
 # ---------------------------------------------------------------------------
+# pallas-blockspec-shape
+# ---------------------------------------------------------------------------
+
+SHAPE_OK = """
+    import jax
+    from jax.experimental import pallas as pl
+
+    def call(kern, x, hd):
+        return pl.pallas_call(
+            kern,
+            grid=(4, 2),
+            in_specs=[pl.BlockSpec((1, 4, hd), lambda b, ki: (b, ki, 0))],
+            out_specs=pl.BlockSpec((1, 4, hd), lambda b, ki: (b, ki, 0)),
+            out_shape=jax.ShapeDtypeStruct((4, 8, hd), x.dtype),
+        )(x)
+"""
+
+
+def test_blockspec_shape_consistent_call_not_flagged():
+    assert "pallas-blockspec-shape" not in rules_hit(SHAPE_OK)
+    assert "pallas-blockspec-shape" not in rules_hit(PALLAS_OK)
+
+
+def test_blockspec_shape_non_dividing_block_flagged():
+    bad = SHAPE_OK.replace("out_specs=pl.BlockSpec((1, 4, hd)",
+                           "out_specs=pl.BlockSpec((1, 3, hd)")
+    assert "pallas-blockspec-shape" in rules_hit(bad)
+
+
+def test_blockspec_shape_grid_axis_overruns_blocks_flagged():
+    # grid axis 0 runs 0..7 but dim 0 only holds 4 blocks
+    bad = SHAPE_OK.replace("grid=(4, 2),", "grid=(8, 2),")
+    assert "pallas-blockspec-shape" in rules_hit(bad)
+
+
+def test_blockspec_shape_constant_index_out_of_symbolic_dim_flagged():
+    # block dim == operand dim (same name `hd`) pins the dim to ONE
+    # block: a constant index 1 is out of range with no literal around
+    bad = SHAPE_OK.replace("lambda b, ki: (b, ki, 0)),\n"
+                           "            out_shape",
+                           "lambda b, ki: (b, ki, 1)),\n"
+                           "            out_shape")
+    assert bad != SHAPE_OK
+    assert "pallas-blockspec-shape" in rules_hit(bad)
+
+
+def test_blockspec_shape_negative_index_flagged():
+    bad = SHAPE_OK.replace("lambda b, ki: (b, ki, 0)),\n"
+                           "            out_shape",
+                           "lambda b, ki: (b, ki, -1)),\n"
+                           "            out_shape")
+    assert bad != SHAPE_OK
+    assert "pallas-blockspec-shape" in rules_hit(bad)
+
+
+def test_blockspec_shape_rank_mismatch_flagged():
+    bad = SHAPE_OK.replace("out_specs=pl.BlockSpec((1, 4, hd)",
+                           "out_specs=pl.BlockSpec((1, 4)")
+    assert "pallas-blockspec-shape" in rules_hit(bad)
+
+
+# ---------------------------------------------------------------------------
 # regression injections into REAL sources (acceptance criteria)
 # ---------------------------------------------------------------------------
 
@@ -446,6 +509,37 @@ def test_breaking_a_real_kernel_contract_fails():
                       "lambda h, qi: (h, qi, 0)", 1)
     assert bad != src
     assert "pallas-kernel-contract" in {
+        f.rule for f in run_source(bad, path).active}
+
+
+def test_stale_block_index_in_ring_kernel_fails():
+    """The ring kernel's out block spans the whole head dim (block hd ==
+    operand hd -> one block); a stale constant index 1 there must trip
+    the shape rule even though every dim is symbolic."""
+    path = "src/repro/kernels/decode_attention.py"
+    src = (ROOT / path).read_text()
+    assert not run_source(src, path).active
+    bad = src.replace(
+        "out_specs=pl.BlockSpec((1, g, hd),\n"
+        "                               lambda r, bi, lens, starts, tabs:"
+        " (r, 0, 0)),",
+        "out_specs=pl.BlockSpec((1, g, hd),\n"
+        "                               lambda r, bi, lens, starts, tabs:"
+        " (r, 0, 1)),", 1)
+    assert bad != src, "expected the ring kernel's out spec to exist"
+    assert "pallas-blockspec-shape" in {
+        f.rule for f in run_source(bad, path).active}
+
+
+def test_stale_block_index_in_flash_kernel_fails():
+    path = "src/repro/kernels/flash_attention.py"
+    src = (ROOT / path).read_text()
+    bad = src.replace("lambda h, qi, ki: (h, qi, 0)),\n"
+                      "        out_shape",
+                      "lambda h, qi, ki: (h, qi, 1)),\n"
+                      "        out_shape", 1)
+    assert bad != src, "expected the flash kernel's out spec to exist"
+    assert "pallas-blockspec-shape" in {
         f.rule for f in run_source(bad, path).active}
 
 

@@ -188,6 +188,84 @@ def test_decode_attention_paged_degenerate_arena():
                                rtol=1e-6, atol=1e-6)
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_ring(dtype):
+    """Ring-table decode: each row's last min(length, window) tokens
+    live in a fixed ring of blocks (position p at ring slot p % window)
+    with a per-row table rotation; the kernel must match the
+    unrotate-then-linearize oracle across unwrapped, part-filled and
+    fully wrapped rows."""
+    rng = np.random.default_rng(11)
+    b, h, kv, hd = 3, 4, 2, 64
+    bs, window = 8, 40
+    w = (window + bs - 1) // bs
+    nb = 1 + b * w
+    q = _rand(rng, (b, h, hd), dtype)
+    k_pool = _rand(rng, (nb, bs, kv, hd), dtype)
+    v_pool = _rand(rng, (nb, bs, kv, hd), dtype)
+    perm = rng.permutation(nb - 1) + 1
+    tables = jnp.asarray(perm[:b * w].reshape(b, w).astype(np.int32))
+    lengths = jnp.asarray([1, 25, 100], jnp.int32)   # wraps only in row 2
+    starts = jnp.asarray([0, 2, 4], jnp.int32)
+    out = ops.decode_attention_ring(q, k_pool, v_pool, tables, starts,
+                                    lengths, window=window, interpret=True)
+    want = ref.decode_attention_ring(q, k_pool, v_pool, tables, starts,
+                                     lengths, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_decode_attention_ring_rotation_invariant():
+    """Rotating (table, start) together is bitwise a no-op: the mask is
+    keyed to ring-slot indices, so a host that rotates tables in place
+    (no block copies) changes nothing in the output."""
+    rng = np.random.default_rng(12)
+    b, h, kv, hd = 2, 4, 2, 64
+    bs, window = 8, 32
+    w = window // bs
+    nb = 1 + b * w
+    q = _rand(rng, (b, h, hd), jnp.float32)
+    k_pool = _rand(rng, (nb, bs, kv, hd), jnp.float32)
+    v_pool = _rand(rng, (nb, bs, kv, hd), jnp.float32)
+    ring = (rng.permutation(nb - 1) + 1)[:b * w].reshape(b, w)
+    lengths = jnp.asarray([17, 77], jnp.int32)
+    base = ops.decode_attention_ring(
+        q, k_pool, v_pool, jnp.asarray(ring.astype(np.int32)),
+        jnp.zeros(b, jnp.int32), lengths, window=window, interpret=True)
+    for s in range(1, w):
+        # entry (s + bi) % w must hold ring block bi -> roll right by s
+        rot = np.roll(ring, s, axis=1).astype(np.int32)
+        out = ops.decode_attention_ring(
+            q, k_pool, v_pool, jnp.asarray(rot),
+            jnp.full(b, s, jnp.int32), lengths, window=window,
+            interpret=True)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(base))
+
+
+def test_decode_attention_ring_degenerate_paged():
+    """While no row has wrapped (length <= window), the ring kernel IS
+    the paged kernel: identical tables, identical DMA schedule,
+    identical mask — the monotone table is the degenerate ring."""
+    rng = np.random.default_rng(13)
+    b, h, kv, hd = 2, 4, 2, 64
+    bs, window = 8, 32
+    w = window // bs
+    nb = 1 + b * w
+    q = _rand(rng, (b, h, hd), jnp.float32)
+    k_pool = _rand(rng, (nb, bs, kv, hd), jnp.float32)
+    v_pool = _rand(rng, (nb, bs, kv, hd), jnp.float32)
+    tables = jnp.asarray(
+        (rng.permutation(nb - 1) + 1)[:b * w].reshape(b, w).astype(np.int32))
+    lengths = jnp.asarray([9, 32], jnp.int32)        # <= window: no wrap
+    ring = ops.decode_attention_ring(q, k_pool, v_pool, tables,
+                                     jnp.zeros(b, jnp.int32), lengths,
+                                     window=window, interpret=True)
+    paged = ops.decode_attention_paged(q, k_pool, v_pool, tables, lengths,
+                                       interpret=True)
+    np.testing.assert_allclose(np.asarray(ring), np.asarray(paged),
+                               rtol=1e-6, atol=1e-6)
+
+
 # ---------------------------------------------------------------------------
 # rwkv6
 # ---------------------------------------------------------------------------

@@ -623,14 +623,135 @@ def test_engine_paged_auto_selects_arena(arch, reason):
         {r.uid: r.output for r in eng.run()}[uid], ref.run()[0].output)
 
 
-def test_engine_paged_auto_selects_arena_sliding_window():
-    """A window override baked into the model (ring < capacity) must
-    also refuse paging: pages never evict, a sliding window must."""
+@pytest.fixture(scope="module")
+def served_windowed():
     cfg = get_smoke("qwen2-0.5b")
     model = build_model(cfg, window=16)
     params = model.init(jax.random.PRNGKey(5))
-    eng = Engine(model, params, max_batch=2, max_len=32, paged=True)
-    assert not eng.paged
+    return cfg, model, params
+
+
+def test_engine_ring_paged_sliding_window_bitwise(served_windowed):
+    """Sliding-window GQA now PAGES: the window becomes a fixed block
+    ring (position p at ring slot p % window, eviction = overwrite), so
+    Engine(paged=True) serves it instead of falling back to the arena —
+    bit-identical to the arena sliding-window path, longer-than-window
+    prompts and generations included."""
+    cfg, model, params = served_windowed
+    rng = np.random.default_rng(44)
+    prompts = [rng.integers(0, cfg.vocab_size, (int(n),))
+               for n in (5, 23, 11, 3)]     # incl. longer-than-window
+
+    ref = Engine(model, params, max_batch=2, max_len=128)
+    assert not ref.paged and not ref.overlap    # windowed arena: serialized
+    for p in prompts:
+        ref.submit(p, max_new_tokens=30)
+    want = {r.uid: r.output for r in ref.run()}
+
+    eng = Engine(model, params, max_batch=2, max_len=128, paged=True,
+                 block_size=8, num_blocks=24, prefill_chunk=32)
+    assert eng.paged and eng.window == 16
+    assert eng.prefill_chunk == 16              # clamped to the ring
+    for p in prompts:
+        eng.submit(p, max_new_tokens=30)
+    outs = {r.uid: r.output for r in eng.run()}
+    assert set(outs) == set(want)
+    for u in want:
+        np.testing.assert_array_equal(outs[u], want[u])
+    assert eng.free_blocks == eng.num_blocks
+
+
+def test_engine_ring_paged_zero_alloc_long_generation(served_windowed):
+    """The ring cap is the whole point: a windowed generation never
+    occupies more than ceil(window / block_size) blocks per slot,
+    however far past the window it runs (BlockAllocator telemetry —
+    the uncapped accounting would have reserved 14 blocks here)."""
+    cfg, model, params = served_windowed
+    rng = np.random.default_rng(45)
+    eng = Engine(model, params, max_batch=1, max_len=64, paged=True,
+                 block_size=8, num_blocks=32, prefill_chunk=8)
+    assert eng.paged
+    eng.submit(rng.integers(0, cfg.vocab_size, (10,)), max_new_tokens=100)
+    out = eng.run()[0].output
+    assert len(out) == 100
+    ring = -(-eng.window // eng.block_size)     # 2
+    assert eng._allocator.peak_in_use <= ring, eng._allocator.peak_in_use
+    assert eng.free_blocks == eng.num_blocks
+
+
+def test_engine_ring_paged_preemption_bitwise(served_windowed):
+    """Preempt-and-recompute through the ring: a starved pool evicts a
+    windowed request mid-generation; its recompute prompt re-prefill
+    and token replay run through the ring-aware steps and the output
+    stays bitwise identical to an unstarved run."""
+    cfg, model, params = served_windowed
+    rng = np.random.default_rng(46)
+    pa = rng.integers(0, cfg.vocab_size, (9,))
+    pb = rng.integers(0, cfg.vocab_size, (12,))
+    budget = 40
+
+    refs = {}
+    for key, p in (("a", pa), ("b", pb)):
+        r = Engine(model, params, max_batch=2, max_len=64, paged=True,
+                   block_size=4, num_blocks=16, prefill_chunk=8)
+        r.submit(p, max_new_tokens=budget)
+        refs[key] = r.run()[0].output
+
+    # ring = 4 blocks per slot; pool 7 admits both optimistically and
+    # runs dry as they wrap, evicting the newer request mid-generation
+    eng = Engine(model, params, max_batch=2, max_len=64, paged=True,
+                 block_size=4, num_blocks=7, prefill_chunk=8)
+    assert eng.paged and eng.preemption == "recompute"
+    ua = eng.submit(pa, max_new_tokens=budget)
+    ub = eng.submit(pb, max_new_tokens=budget)
+    outs = {r.uid: r for r in _drain_capped(eng, max_steps=800)}
+    assert outs[ub].preemptions >= 1
+    assert eng.stats["replayed_tokens"] > 0
+    np.testing.assert_array_equal(outs[ua].output, refs["a"])
+    np.testing.assert_array_equal(outs[ub].output, refs["b"])
+    assert eng.free_blocks == eng.num_blocks
+
+
+def test_family_capability_flags_windowed(served_windowed):
+    """The sliding-window caps matrix: windowed GQA opts into paging /
+    chunked prefill / mixed step (the ring), while windowed MLA and
+    recurrent stacks keep degrading to the arena with serialized
+    admission — and the engine resolution follows the backend: the
+    SAME windowed GQA model overlaps when paged, serializes on the
+    arena (its exact-length prefill has no fused-step shape)."""
+    cfg, model, params = served_windowed
+    caps = probe_family_caps(model, max_batch=2, capacity=32)
+    assert caps == FamilyCaps(pad_prompts=False, supports_paging=True,
+                              supports_chunked_prefill=True,
+                              supports_mixed_step=True)
+    arena = Engine(model, params, max_batch=1, max_len=32)
+    assert not arena.paged and not arena.overlap
+    assert arena.stats["overlap_mode"] == ""
+    paged = Engine(model, params, max_batch=1, max_len=32, paged=True)
+    assert paged.paged and paged.overlap
+    assert paged.stats["overlap_mode"] == "fused"
+
+    mla = build_model(_mla_cfg(), window=16)
+    assert probe_family_caps(mla, max_batch=2, capacity=32) == FamilyCaps(
+        pad_prompts=False, supports_paging=False,
+        supports_chunked_prefill=False, supports_mixed_step=False)
+
+    rec = build_model(get_smoke("rwkv6-1.6b"), window=16)
+    assert probe_family_caps(rec, max_batch=2, capacity=32) == FamilyCaps(
+        pad_prompts=False, supports_paging=False,
+        supports_chunked_prefill=False, supports_mixed_step=False)
+
+
+def test_probe_family_caps_memoized():
+    """probe_family_caps eval_shape-traces several entry points; one
+    Engine construction per cache bucket must not re-pay that — probes
+    are memoized per (model, signature), weakly keyed by the Model."""
+    from repro.serve.engine import _CAPS_CACHE
+    model = build_model(get_smoke("qwen2-0.5b"))
+    c1 = probe_family_caps(model, max_batch=2, capacity=32)
+    assert probe_family_caps(model, max_batch=2, capacity=32) is c1
+    assert probe_family_caps(model, max_batch=2, capacity=64) is not c1
+    assert model in _CAPS_CACHE
 
 
 def test_bucketing_bounds_compiles(served):
@@ -811,6 +932,66 @@ print("MESH_ENGINE_OK")
                          capture_output=True, text=True, timeout=900,
                          cwd=os.path.join(os.path.dirname(__file__), ".."))
     assert "MESH_ENGINE_OK" in res.stdout, res.stdout + res.stderr
+
+
+def test_engine_ring_paged_on_mesh_subprocess():
+    """Ring-paged sliding window on a ("data", "model") mesh: the paged
+    windowed engine (async overlapped admission, starved pool forcing a
+    mid-generation preemption + ring replay) must match the same-mesh
+    arena windowed reference bitwise (subprocess: 4 forced host
+    devices)."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env.pop("JAX_PLATFORMS", None)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    code = r"""
+import sys
+sys.path.insert(0, "src")
+import numpy as np, jax
+from jax.sharding import Mesh
+from repro.configs.base import ArchConfig
+from repro.models import build_model
+from repro.serve import Engine
+
+cfg = ArchConfig(name="t", family="dense", source="test", num_layers=2,
+                 d_model=128, num_heads=4, num_kv_heads=2, head_dim=32,
+                 d_ff=256, vocab_size=512, tie_embeddings=True)
+model = build_model(cfg, window=16)
+params = model.init(jax.random.PRNGKey(0))
+mesh = Mesh(np.array(jax.devices()).reshape(2, 2), ("data", "model"))
+rng = np.random.default_rng(3)
+pa = rng.integers(0, cfg.vocab_size, (9,))
+pb = rng.integers(0, cfg.vocab_size, (12,))
+budget = 24                                 # wraps the 16-token ring
+
+ref = Engine(model, params, max_batch=2, max_len=64, mesh=mesh)
+assert not ref.paged and not ref.overlap    # windowed arena: serialized
+for p in (pa, pb):
+    ref.submit(p, max_new_tokens=budget)
+want = {r.uid: r.output for r in ref.run()}
+
+# ring = 4 blocks per slot; pool 7 admits both then runs dry as they
+# wrap, evicting the younger request mid-generation (ring replay)
+eng = Engine(model, params, max_batch=2, max_len=64, mesh=mesh,
+             paged=True, block_size=4, num_blocks=7, prefill_chunk=8)
+assert eng.paged and eng.window == 16
+assert eng.overlap and eng.overlap_mode == "async"
+ua = eng.submit(pa, max_new_tokens=budget)
+ub = eng.submit(pb, max_new_tokens=budget)
+outs = {r.uid: r for r in eng.run()}
+assert outs[ub].preemptions >= 1, outs[ub].preemptions
+for u in want:
+    np.testing.assert_array_equal(outs[u].output, want[u])
+assert eng.free_blocks == eng.num_blocks
+print("MESH_RING_OK")
+"""
+    res = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900,
+                         cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert "MESH_RING_OK" in res.stdout, res.stdout + res.stderr
 
 
 def test_engine_sliding_window_exact_prefill():
